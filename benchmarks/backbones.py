@@ -1,0 +1,71 @@
+"""Paper §IV-C backbone comparison (the paper's main table): train each
+spiking backbone briefly on GEN1-like synthetic scenes, report AP@0.5
+and network sparsity.  Mirrors the paper's finding structure: Spiking
+YOLO best AP (paper: 0.4726), MobileNet best sparsity (paper: 48.08%).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import SNN_ARCHS, reduced_snn
+from repro.core.encoding import voxel_batch
+from repro.core.npu import init_npu, npu_forward
+from repro.core.train import init_snn_state, make_snn_train_step
+from repro.core.yolo import average_precision, decode_boxes
+from repro.data.synthetic import make_scene_batch
+from repro.optim.adamw import AdamWConfig
+
+STEPS = 60
+
+
+def _scenes(step, cfg, batch=8):
+    return make_scene_batch(jax.random.PRNGKey(step), batch=batch,
+                            height=cfg.height, width=cfg.width,
+                            time_steps=cfg.time_steps)
+
+
+def _eval(params, cfg, n_batches=3):
+    pb, ps, gb, spars, skips = [], [], [], [], []
+    for i in range(500, 500 + n_batches):
+        scene = _scenes(i, cfg)
+        vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                          height=cfg.height, width=cfg.width)
+        out = npu_forward(params, vox, cfg)
+        spars.append(float(out.sparsity))
+        skips.append(float(out.tile_skip))
+        boxes, scores, _ = decode_boxes(out.raw_pred, cfg)
+        for b in range(boxes.shape[0]):
+            pb.append(np.asarray(boxes[b]))
+            ps.append(np.asarray(scores[b]))
+            gt = np.asarray(scene.boxes[b])[np.asarray(scene.valid[b])]
+            c = gt[:, 1:]
+            gb.append(np.stack([c[:, 0] - c[:, 2] / 2, c[:, 1] - c[:, 3] / 2,
+                                c[:, 0] + c[:, 2] / 2, c[:, 1] + c[:, 3] / 2],
+                               -1) if len(gt) else np.zeros((0, 4)))
+    return (average_precision(pb, ps, gb), float(np.mean(spars)),
+            float(np.mean(skips)))
+
+
+def run(emit):
+    opt = AdamWConfig(lr=2e-3, weight_decay=1e-4)
+    results = {}
+    for name in SNN_ARCHS:
+        cfg = reduced_snn(name)
+        state = init_snn_state(init_npu(jax.random.PRNGKey(0), cfg), opt)
+        step = jax.jit(make_snn_train_step(cfg, opt))
+        t0 = time.perf_counter()
+        for i in range(STEPS):
+            state, m = step(state, _scenes(i, cfg))
+        t_train = (time.perf_counter() - t0) / STEPS * 1e6
+        ap, sparsity, tile_skip = _eval(state.params, cfg)
+        results[name] = (ap, sparsity)
+        emit(f"backbone_{name}_ap", t_train, f"{ap:.4f}")
+        emit(f"backbone_{name}_sparsity", t_train, f"{sparsity:.4f}")
+        emit(f"backbone_{name}_tile_skip", t_train, f"{tile_skip:.4f}")
+    best_ap = max(results, key=lambda k: results[k][0])
+    best_sp = max(results, key=lambda k: results[k][1])
+    emit("backbone_best_ap", 0.0, best_ap)
+    emit("backbone_best_sparsity", 0.0, best_sp)

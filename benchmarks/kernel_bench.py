@@ -1,0 +1,49 @@
+"""Pallas kernel timings (interpret mode on CPU — correctness-oriented;
+real perf numbers come from the roofline analysis, not CPU wall time)
+plus the jnp-reference timings the kernels are validated against.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.spike_matmul import spike_matmul_pallas
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+
+    # tile-skip effectiveness: fraction of MXU tiles skipped at realistic
+    # spike sparsities (the paper's 48% neuron sparsity -> tile stats)
+    for density in (0.5, 0.1, 0.02):
+        x = (rng.random((512, 512)) < density).astype(np.float32)
+        tiles = x.reshape(4, 128, 4, 128).transpose(0, 2, 1, 3)
+        skip = float(np.mean(tiles.reshape(16, -1).sum(-1) == 0))
+        emit(f"spike_matmul_tile_skip_d{density}", 0.0, f"{skip:.3f}")
+
+    t = _time(jax.jit(lambda a, b: ref.spike_matmul_ref(a, b)),
+              jnp.asarray((rng.random((256, 256)) < 0.1).astype(np.float32)),
+              jnp.asarray(rng.normal(0, 1, (256, 256)).astype(np.float32)))
+    emit("spike_matmul_jnp_ref_256", t, "dense_path")
+
+    q = jnp.asarray(rng.normal(0, 1, (8, 256, 64)).astype(np.float32))
+    t = _time(jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v)),
+              q, q, q)
+    emit("flash_attention_jnp_ref", t, "BH8_S256_d64")
+
+    cur = jnp.asarray(rng.normal(0.5, 1, (8, 16384)).astype(np.float32))
+    t = _time(jax.jit(lambda c: ref.lif_scan_ref(c)), cur)
+    emit("lif_scan_jnp_ref", t, "T8_N16384")

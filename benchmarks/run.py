@@ -1,0 +1,28 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+#   backbones.py  -> paper §IV-C backbone table (AP@0.5 + sparsity)
+#   isp_bench.py  -> paper §V ISP pipeline stage timings
+#   npu_bench.py  -> paper §IV NPU event throughput / sparsity
+#   kernel_bench  -> Pallas kernel / tile-skip stats (§VI adaptation)
+#   roofline      -> EXPERIMENTS.md §Roofline table from the dry-run
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    def emit(name, us, derived=""):
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    from benchmarks import backbones, isp_bench, kernel_bench, npu_bench, \
+        roofline_bench
+    isp_bench.run(emit)
+    npu_bench.run(emit)
+    kernel_bench.run(emit)
+    backbones.run(emit)
+    roofline_bench.run(emit)
+
+
+if __name__ == '__main__':
+    main()

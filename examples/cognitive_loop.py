@@ -1,0 +1,74 @@
+"""The closed cognitive loop (paper §VI): the NPU watches the DVS stream
+and reconfigures the ISP on the fly.  We train the control head
+end-to-end (differentiable ISP — something the FPGA cannot do) on scenes
+with photometric drift, then show the NPU-driven ISP beating the static
+ISP as lighting changes.
+
+  PYTHONPATH=src python examples/cognitive_loop.py [--steps 80]
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import reduced_snn
+from repro.core.cognitive import cognitive_step
+from repro.core.encoding import voxel_batch
+from repro.core.npu import init_npu
+from repro.core.train import init_snn_state, make_snn_train_step
+from repro.data.synthetic import make_scene_batch
+from repro.isp.pipeline import default_params, isp_pipeline_batch
+from repro.optim.adamw import AdamWConfig
+
+
+def psnr(a, b):
+    return float(-10 * jnp.log10(jnp.maximum(
+        jnp.mean((a - b) ** 2), 1e-9)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+
+    cfg = reduced_snn("spiking_yolo")
+    opt = AdamWConfig(lr=2e-3, weight_decay=1e-4)
+    state = init_snn_state(init_npu(jax.random.PRNGKey(0), cfg), opt)
+    step = jax.jit(make_snn_train_step(cfg, opt, mode="cognitive"))
+
+    def drift_scene(i, lighting, wb):
+        return make_scene_batch(jax.random.PRNGKey(i), batch=4,
+                                height=cfg.height, width=cfg.width,
+                                time_steps=cfg.time_steps,
+                                lighting=lighting, wb_drift=wb)
+
+    print("training the cognitive loop on drifting scenes...")
+    for i in range(args.steps):
+        # lighting & colour drift vary across the stream
+        light = 0.4 + 0.4 * ((i * 37) % 10) / 10
+        wb = (1.0 + 0.5 * ((i * 13) % 7) / 7, 0.7 + 0.3 * ((i * 7) % 5) / 5)
+        state, m = step(state, drift_scene(i, light, wb))
+        if i % 20 == 0:
+            print(f"  step {i}: loss={float(m['loss']):.3f} "
+                  f"recon={float(m['recon']):.4f}")
+
+    print("\nevaluation under three lighting conditions:")
+    for light, wb, label in [(0.45, (1.5, 0.7), "dim, warm-shifted"),
+                             (0.8, (0.8, 1.3), "normal, cool-shifted"),
+                             (1.0, (1.0, 1.0), "nominal")]:
+        scene = drift_scene(1000, light, wb)
+        vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                          height=cfg.height, width=cfg.width)
+        out = cognitive_step(state.params, vox, scene.bayer, cfg)
+        static = isp_pipeline_batch(scene.bayer, default_params())
+        print(f"  {label:24s} PSNR: static ISP "
+              f"{psnr(static, scene.clean_rgb):5.2f} dB | cognitive "
+              f"{psnr(out.rgb, scene.clean_rgb):5.2f} dB")
+        p = jax.tree_util.tree_map(lambda x: float(x[0]), out.isp_params)
+        print(f"    NPU chose: exposure={p.exposure_gain:.2f} "
+              f"wb_r={p.wb_bias_r:.2f} wb_b={p.wb_bias_b:.2f} "
+              f"gamma={p.gamma:.2f} nlm={p.nlm_strength:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+"""End-to-end driver: train the Spiking-YOLO detector (paper §IV) for a
+few hundred steps on synthetic GEN1-like event scenes, with
+checkpointing + resume, reporting loss, AP@0.5 and sparsity.
+
+  PYTHONPATH=src python examples/train_snn_detector.py [--steps 300]
+"""
+import argparse
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs.registry import reduced_snn
+from repro.checkpoint.manager import CheckpointManager
+from repro.core.encoding import voxel_batch
+from repro.core.npu import init_npu, npu_forward
+from repro.core.train import init_snn_state, make_snn_train_step
+from repro.core.yolo import average_precision, decode_boxes
+from repro.data.synthetic import make_scene_batch
+from repro.optim.adamw import AdamWConfig
+from repro.train.trainer import Trainer
+
+
+def evaluate(params, cfg, n=4):
+    pb, ps, gb, sp = [], [], [], []
+    for i in range(900, 900 + n):
+        scene = make_scene_batch(jax.random.PRNGKey(i), batch=8,
+                                 height=cfg.height, width=cfg.width,
+                                 time_steps=cfg.time_steps)
+        vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                          height=cfg.height, width=cfg.width)
+        out = npu_forward(params, vox, cfg)
+        sp.append(float(out.sparsity))
+        boxes, scores, _ = decode_boxes(out.raw_pred, cfg)
+        for b in range(boxes.shape[0]):
+            pb.append(np.asarray(boxes[b]))
+            ps.append(np.asarray(scores[b]))
+            gt = np.asarray(scene.boxes[b])[np.asarray(scene.valid[b])]
+            c = gt[:, 1:]
+            gb.append(np.stack(
+                [c[:, 0] - c[:, 2] / 2, c[:, 1] - c[:, 3] / 2,
+                 c[:, 0] + c[:, 2] / 2, c[:, 1] + c[:, 3] / 2], -1)
+                if len(gt) else np.zeros((0, 4)))
+    return average_precision(pb, ps, gb), float(np.mean(sp))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced_snn("spiking_yolo")
+    opt = AdamWConfig(lr=2e-3, weight_decay=1e-4)
+    state = init_snn_state(init_npu(jax.random.PRNGKey(0), cfg), opt)
+    step = jax.jit(make_snn_train_step(cfg, opt))
+
+    ap0, sp0 = evaluate(state.params, cfg)
+    print(f"before training: AP@0.5={ap0:.4f} sparsity={sp0:.3f}")
+
+    def data(s):
+        return make_scene_batch(jax.random.PRNGKey(s), batch=args.batch,
+                                height=cfg.height, width=cfg.width,
+                                time_steps=cfg.time_steps)
+
+    with tempfile.TemporaryDirectory() as d:
+        ckpt = CheckpointManager(d, keep=2)
+        trainer = Trainer(step, state, data, ckpt=ckpt, ckpt_every=100,
+                          log_every=25)
+        state = trainer.run(args.steps)
+        print(f"checkpoints kept: {ckpt.all_steps()}")
+        # prove restart works
+        resumed = Trainer(step, trainer.state, data, ckpt=ckpt)
+        resumed.maybe_resume()
+
+    ap1, sp1 = evaluate(state.params, cfg)
+    losses = [h["loss"] for h in trainer.history]
+    print(f"loss: {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}")
+    print(f"after {args.steps} steps: AP@0.5={ap1:.4f} (was {ap0:.4f}) "
+          f"sparsity={sp1:.3f}")
+    print("paper reference: Spiking YOLO AP@0.5=0.4726 on Prophesee GEN1 "
+          "(full-scale training)")
+
+
+if __name__ == "__main__":
+    main()

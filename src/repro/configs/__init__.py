@@ -1,0 +1,5 @@
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig,  # noqa: F401
+                                SHAPES, SHAPES_BY_NAME, SNNConfig, SSMConfig,
+                                ShapeConfig)
+from repro.configs.registry import (ARCHS, SNN_ARCHS, get_config,  # noqa: F401
+                                    get_snn_config, reduced, shape_cells)

@@ -1,0 +1,194 @@
+"""Architecture registry: the 10 assigned archs + the paper's SNN archs.
+
+Each assigned arch also ships a ``reduced()`` variant (same family, tiny
+dims) used by the per-arch CPU smoke tests; the full configs are only
+ever lowered abstractly by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.configs import base
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SNNConfig,
+                                SSMConfig, ShapeConfig)
+
+# ---------------------------------------------------------------------------
+# Assigned architectures (shapes per brief; sources in DESIGN.md)
+# ---------------------------------------------------------------------------
+
+ARCHS: Dict[str, ModelConfig] = {}
+
+
+def _register(cfg: ModelConfig) -> ModelConfig:
+    ARCHS[cfg.name] = cfg
+    return cfg
+
+
+_register(ModelConfig(
+    name="mistral-nemo-12b", family="dense",
+    num_layers=40, d_model=5120, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=131072, max_seq_len=131072,
+    rope_theta=1e6))
+
+_register(ModelConfig(
+    name="glm4-9b", family="dense",
+    num_layers=40, d_model=4096, num_heads=32, num_kv_heads=2,
+    head_dim=128, d_ff=13696, vocab_size=151552, rope_theta=1e6))
+
+_register(ModelConfig(
+    name="qwen1.5-4b", family="dense",
+    num_layers=40, d_model=2560, num_heads=20, num_kv_heads=20,
+    head_dim=128, d_ff=6912, vocab_size=151936, qkv_bias=True,
+    rope_theta=5e6))
+
+_register(ModelConfig(
+    name="qwen2-7b", family="dense",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    head_dim=128, d_ff=18944, vocab_size=152064, qkv_bias=True,
+    rope_theta=1e6))
+
+_register(ModelConfig(
+    name="arctic-480b", family="moe",
+    num_layers=35, d_model=7168, num_heads=56, num_kv_heads=8,
+    head_dim=128, d_ff=4864, vocab_size=32000,
+    moe=MoEConfig(num_experts=128, top_k=2, d_expert=4864,
+                  dense_residual=True, capacity_factor=2.0)))
+
+_register(ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    num_layers=61, d_model=7168, num_heads=128, num_kv_heads=128,
+    d_ff=18432,               # dense layers use 18432 (hf config);
+                              # the assigned d_ff=2048 is the expert width
+    vocab_size=129280, mtp_depth=1,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64,
+                  v_head_dim=128),
+    moe=MoEConfig(num_experts=256, top_k=8, d_expert=2048,
+                  num_shared_experts=1, first_dense_layers=3,
+                  moe_layer_offset=0, capacity_factor=2.0)))
+
+_register(ModelConfig(
+    name="hubert-xlarge", family="audio",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16,
+    d_ff=5120, vocab_size=504, causal=False, act="gelu", norm_kind="ln"))
+
+_register(ModelConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=32000, rope_theta=1e6,
+    frontend_embed_tokens=576))
+
+_register(ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=65536,
+    layer_pattern="MMMMAMMM",          # attention at layer 4 of each 8
+    attention_window=4096,             # windowed attn => long_500k runnable
+    ssm=SSMConfig(kind="mamba", d_state=16, d_conv=4, expand=2),
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=14336,
+                  moe_layer_period=2, moe_layer_offset=1,
+                  capacity_factor=2.0)))
+
+_register(ModelConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    layer_pattern="LLLLLLLS",          # xLSTM[7:1]
+    ssm=SSMConfig(kind="mlstm", expand=2)))
+
+
+# ---------------------------------------------------------------------------
+# Shape-cell applicability
+# ---------------------------------------------------------------------------
+
+_FULL_ATTENTION = {"mistral-nemo-12b", "glm4-9b", "qwen1.5-4b", "qwen2-7b",
+                   "arctic-480b", "deepseek-v3-671b",
+                   "llava-next-mistral-7b"}
+
+
+def shape_cells(arch: str) -> List[Tuple[str, str]]:
+    """Runnable (arch, shape) cells with skip rules from DESIGN.md."""
+    cfg = ARCHS[arch]
+    cells = []
+    for s in base.SHAPES:
+        if not cfg.causal and s.kind == "decode":
+            continue                       # encoder-only: no decode step
+        if s.name == "long_500k" and arch in _FULL_ATTENTION:
+            continue                       # needs sub-quadratic attention
+        cells.append((arch, s.name))
+    return cells
+
+
+def all_cells() -> List[Tuple[str, str]]:
+    out = []
+    for a in ARCHS:
+        out.extend(shape_cells(a))
+    return out
+
+
+def get_config(name: str) -> ModelConfig:
+    return ARCHS[name]
+
+
+# ---------------------------------------------------------------------------
+# Reduced configs for CPU smoke tests
+# ---------------------------------------------------------------------------
+
+def reduced(name: str) -> ModelConfig:
+    cfg = ARCHS[name]
+    changes = dict(
+        num_layers=max(2, len(cfg.layer_pattern) or 2),
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2))
+        if cfg.num_kv_heads < cfg.num_heads else 4,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=128,
+        max_seq_len=256,
+        frontend_embed_tokens=min(cfg.frontend_embed_tokens, 8),
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=4, top_k=min(cfg.moe.top_k, 2), d_expert=32,
+            first_dense_layers=min(cfg.moe.first_dense_layers, 1))
+        if cfg.moe.first_dense_layers:
+            changes["num_layers"] = 3
+    if cfg.mla is not None:
+        changes["mla"] = MLAConfig(q_lora_rank=32, kv_lora_rank=16,
+                                   qk_nope_head_dim=16, qk_rope_head_dim=8,
+                                   v_head_dim=16)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(cfg.ssm, d_state=4, d_conv=4,
+                                             expand=2)
+    if cfg.layer_pattern:
+        changes["num_layers"] = 2 * len(cfg.layer_pattern)
+    return dataclasses.replace(cfg, **changes)
+
+
+# ---------------------------------------------------------------------------
+# Paper SNN architectures
+# ---------------------------------------------------------------------------
+
+SNN_ARCHS: Dict[str, SNNConfig] = {
+    "spiking_vgg": SNNConfig(name="spiking_vgg", backbone="vgg",
+                             base_channels=32, num_stages=4),
+    "spiking_densenet": SNNConfig(name="spiking_densenet", backbone="densenet",
+                                  base_channels=24, num_stages=3),
+    "spiking_mobilenet": SNNConfig(name="spiking_mobilenet",
+                                   backbone="mobilenet",
+                                   base_channels=32, num_stages=4),
+    "spiking_yolo": SNNConfig(name="spiking_yolo", backbone="yolo",
+                              base_channels=32, num_stages=4),
+}
+
+
+def get_snn_config(name: str) -> SNNConfig:
+    return SNN_ARCHS[name]
+
+
+def reduced_snn(name: str) -> SNNConfig:
+    return dataclasses.replace(
+        SNN_ARCHS[name], base_channels=8, num_stages=2, time_steps=3,
+        height=32, width=32)

@@ -1,0 +1,3 @@
+from repro.core.lif import lif_scan, lif_step, spike  # noqa: F401
+from repro.core.npu import NPUOutput, init_npu, npu_forward  # noqa: F401
+from repro.core.cognitive import CognitiveOutput, cognitive_step  # noqa: F401

@@ -1,0 +1,148 @@
+"""The paper's four spiking backbones (§IV-C), built from spiking layers.
+
+All take a voxel grid [T, B, H, W, 2] and return features
+[T, B, H/2^stages, W/2^stages, C_out].
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SNNConfig
+from repro.core.layers import (apply_spiking_conv, init_spiking_conv,
+                               max_pool)
+
+
+def _stage_channels(cfg: SNNConfig) -> List[int]:
+    return [cfg.base_channels * (2 ** i) for i in range(cfg.num_stages)]
+
+
+# --------------------------------------------------------------------- VGG
+
+def init_vgg(rng, cfg: SNNConfig):
+    chans = _stage_channels(cfg)
+    params, cin = {}, cfg.in_channels
+    keys = jax.random.split(rng, 2 * len(chans))
+    for i, c in enumerate(chans):
+        params[f"s{i}_a"] = init_spiking_conv(keys[2 * i], cin, c)
+        params[f"s{i}_b"] = init_spiking_conv(keys[2 * i + 1], c, c)
+        cin = c
+    return params
+
+
+def apply_vgg(p, x, cfg: SNNConfig):
+    for i in range(cfg.num_stages):
+        x = apply_spiking_conv(p[f"s{i}_a"], x, cfg)
+        x = apply_spiking_conv(p[f"s{i}_b"], x, cfg)
+        x = max_pool(x)
+    return x
+
+
+# ---------------------------------------------------------------- DenseNet
+
+def init_densenet(rng, cfg: SNNConfig, layers_per_block: int = 3):
+    growth = cfg.base_channels
+    params: Dict[str, Any] = {}
+    cin = cfg.in_channels
+    rngs = iter(jax.random.split(rng, cfg.num_stages * (layers_per_block + 1)
+                                 + 1))
+    params["stem"] = init_spiking_conv(next(rngs), cin, growth)
+    cin = growth
+    for s in range(cfg.num_stages):
+        for l in range(layers_per_block):
+            params[f"b{s}_l{l}"] = init_spiking_conv(next(rngs), cin, growth)
+            cin += growth                       # dense concat
+        params[f"t{s}"] = init_spiking_conv(next(rngs), cin, cin // 2,
+                                            kernel=1)
+        cin = cin // 2
+    return params
+
+
+def apply_densenet(p, x, cfg: SNNConfig, layers_per_block: int = 3):
+    x = apply_spiking_conv(p["stem"], x, cfg)
+    for s in range(cfg.num_stages):
+        feats = [x]
+        for l in range(layers_per_block):
+            inp = jnp.concatenate(feats, axis=-1)
+            feats.append(apply_spiking_conv(p[f"b{s}_l{l}"], inp, cfg))
+        x = jnp.concatenate(feats, axis=-1)
+        x = apply_spiking_conv(p[f"t{s}"], x, cfg)   # 1x1 transition
+        x = max_pool(x)
+    return x
+
+
+# --------------------------------------------------------------- MobileNet
+
+def init_mobilenet(rng, cfg: SNNConfig):
+    chans = _stage_channels(cfg)
+    params: Dict[str, Any] = {}
+    rngs = iter(jax.random.split(rng, 2 * len(chans) + 1))
+    params["stem"] = init_spiking_conv(next(rngs), cfg.in_channels, chans[0])
+    cin = chans[0]
+    for i, c in enumerate(chans):
+        params[f"dw{i}"] = init_spiking_conv(next(rngs), cin, cin,
+                                             depthwise=True)
+        params[f"pw{i}"] = init_spiking_conv(next(rngs), cin, c, kernel=1)
+        cin = c
+    return params
+
+
+def apply_mobilenet(p, x, cfg: SNNConfig):
+    x = apply_spiking_conv(p["stem"], x, cfg)
+    for i in range(cfg.num_stages):
+        x = apply_spiking_conv(p[f"dw{i}"], x, cfg, stride=2, depthwise=True)
+        x = apply_spiking_conv(p[f"pw{i}"], x, cfg)
+    return x
+
+
+# -------------------------------------------------------------------- YOLO
+
+def init_yolo_backbone(rng, cfg: SNNConfig):
+    """Tiny-YOLO-style: stride-2 downsample convs + 3x3 feature convs."""
+    chans = _stage_channels(cfg)
+    params: Dict[str, Any] = {}
+    rngs = iter(jax.random.split(rng, 2 * len(chans) + 1))
+    cin = cfg.in_channels
+    for i, c in enumerate(chans):
+        params[f"d{i}"] = init_spiking_conv(next(rngs), cin, c)
+        params[f"f{i}"] = init_spiking_conv(next(rngs), c, c)
+        cin = c
+    return params
+
+
+def apply_yolo_backbone(p, x, cfg: SNNConfig):
+    for i in range(cfg.num_stages):
+        x = apply_spiking_conv(p[f"d{i}"], x, cfg, stride=2)
+        x = apply_spiking_conv(p[f"f{i}"], x, cfg)
+    return x
+
+
+BACKBONES = {
+    "vgg": (init_vgg, apply_vgg),
+    "densenet": (init_densenet, apply_densenet),
+    "mobilenet": (init_mobilenet, apply_mobilenet),
+    "yolo": (init_yolo_backbone, apply_yolo_backbone),
+}
+
+
+def backbone_out_channels(cfg: SNNConfig) -> int:
+    """Trace-free output-channel computation."""
+    if cfg.backbone == "densenet":
+        growth = cfg.base_channels
+        cin = growth
+        for s in range(cfg.num_stages):
+            cin = (cin + 3 * growth) // 2
+        return cin
+    return _stage_channels(cfg)[-1]
+
+
+def spatial_reduction(cfg: SNNConfig) -> int:
+    if cfg.backbone == "vgg":
+        return 2 ** cfg.num_stages
+    if cfg.backbone == "densenet":
+        return 2 ** cfg.num_stages
+    if cfg.backbone == "mobilenet":
+        return 2 ** cfg.num_stages
+    return 2 ** cfg.num_stages

@@ -1,0 +1,47 @@
+"""DVS event encoding (paper §IV-A): asynchronous event stream -> one-hot
+spatio-temporal voxel grid.
+
+Events are tuples e = (t, x, y, p).  The continuous stream is segmented
+into a fixed temporal window, binned into ``time_steps`` bins, and
+scatter-accumulated into a tensor [T, H, W, P] (P = 2 polarities).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EventStream(NamedTuple):
+    """Fixed-capacity event buffer (TPU needs static shapes; FPGA streams
+    map to a bounded event FIFO per window — same discipline)."""
+    t: jax.Array      # [N] float32 in [0, window)
+    x: jax.Array      # [N] int32
+    y: jax.Array      # [N] int32
+    p: jax.Array      # [N] int32 {0, 1}
+    valid: jax.Array  # [N] bool
+
+
+def events_to_voxel(ev: EventStream, *, time_steps: int, height: int,
+                    width: int, window: float = 1.0,
+                    binary: bool = True) -> jax.Array:
+    """-> voxel grid [T, H, W, 2]. ``binary`` gives the paper's one-hot
+    encoding; False accumulates event counts."""
+    tbin = jnp.clip((ev.t / window * time_steps).astype(jnp.int32),
+                    0, time_steps - 1)
+    flat = ((tbin * height + ev.y) * width + ev.x) * 2 + ev.p
+    flat = jnp.where(ev.valid, flat, time_steps * height * width * 2)
+    grid = jnp.zeros((time_steps * height * width * 2 + 1,), jnp.float32)
+    grid = grid.at[flat].add(1.0)[:-1]
+    grid = grid.reshape(time_steps, height, width, 2)
+    if binary:
+        grid = (grid > 0).astype(jnp.float32)
+    return grid
+
+
+def voxel_batch(evs: EventStream, **kw) -> jax.Array:
+    """Batched encoding: EventStream leaves have a leading batch dim.
+    -> [T, B, H, W, 2] (time-major for the multi-step SNN layers)."""
+    v = jax.vmap(lambda e: events_to_voxel(e, **kw))(evs)   # [B,T,H,W,2]
+    return jnp.moveaxis(v, 0, 1)

@@ -1,0 +1,102 @@
+"""Spiking layers (multi-step mode): conv / depthwise conv / dense + LIF.
+
+Layout: activations are [T, B, H, W, C] (time-major; conv applied to the
+folded [T*B, H, W, C] batch so the MXU sees one big conv per layer).
+BatchNorm is replaced by a per-channel affine ("tdBN"-style static scale)
+— running statistics across T steps are a training-stability device from
+the GPU SNN literature; a static scale keeps the layer bijective for the
+hardware mapping and trains fine at these scales.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SNNConfig
+from repro.core.lif import lif_scan
+
+
+def conv_init(rng, shape, dtype=jnp.float32):
+    # shape: [kh, kw, cin, cout]
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(rng, shape, dtype) * (2.0 / fan_in) ** 0.5
+
+
+def init_spiking_conv(rng, cin: int, cout: int, *, kernel: int = 3,
+                      depthwise: bool = False):
+    k1, _ = jax.random.split(rng)
+    if depthwise:
+        w = conv_init(k1, (kernel, kernel, 1, cin))
+    else:
+        w = conv_init(k1, (kernel, kernel, cin, cout))
+    return {"w": w,
+            "scale": jnp.ones((cout if not depthwise else cin,)),
+            "bias": jnp.zeros((cout if not depthwise else cin,))}
+
+
+def _conv2d(x, w, stride: int, depthwise: bool, cin: int):
+    dn = jax.lax.conv_dimension_numbers(x.shape, w.shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=dn,
+        feature_group_count=cin if depthwise else 1)
+
+
+def apply_spiking_conv(p, x, cfg: SNNConfig, *, stride: int = 1,
+                       depthwise: bool = False, fire: bool = True,
+                       normalize: bool = True):
+    """x: [T, B, H, W, C] -> spikes [T, B, H', W', C'].
+
+    ``normalize`` applies per-channel instance normalisation over
+    (T, H, W) before the LIF — the functional stand-in for the tdBN the
+    GPU SNN literature folds into thresholds; without it deep spiking
+    stacks are silent at init (currents never cross v_th).
+    """
+    T, B, H, W, C = x.shape
+    # fold BATCH-major: reshape(T*B, ...) would merge the time dim over
+    # the SPMD-sharded batch dim, which GSPMD cannot express — it
+    # replicates the whole conv on every chip (256x compute in the
+    # dry-run; EXPERIMENTS.md §Perf hillclimb C). (B*T, ...) keeps the
+    # merged dim block-sharded by batch.
+    xf = jnp.swapaxes(x, 0, 1).reshape(B * T, H, W, C)
+    y = _conv2d(xf, p["w"], stride, depthwise, C)
+    _, Ho, Wo, Co = y.shape
+    y = jnp.swapaxes(y.reshape(B, T, Ho, Wo, Co), 0, 1)
+    if normalize:
+        # rsqrt(var + eps): jnp.std has a non-finite gradient at zero
+        # variance (silent channels on sparse spike inputs)
+        mu = jnp.mean(y, axis=(0, 2, 3), keepdims=True)
+        var = jnp.var(y, axis=(0, 2, 3), keepdims=True)
+        y = (y - mu) * jax.lax.rsqrt(var + 1e-6)
+    y = y * p["scale"] + p["bias"]
+    if not fire:
+        return y
+    return lif_scan(y, tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                    v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
+
+
+def init_spiking_dense(rng, cin: int, cout: int):
+    return {"w": jax.random.normal(rng, (cin, cout)) * (2.0 / cin) ** 0.5,
+            "bias": jnp.zeros((cout,))}
+
+
+def apply_spiking_dense(p, x, cfg: SNNConfig, *, fire: bool = True):
+    """x: [T, B, C]."""
+    y = x @ p["w"] + p["bias"]
+    if not fire:
+        return y
+    return lif_scan(y, tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                    v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
+
+
+def max_pool(x, window: int = 2):
+    """x: [T, B, H, W, C] (batch-major fold — see apply_spiking_conv)."""
+    T, B, H, W, C = x.shape
+    xf = jnp.swapaxes(x, 0, 1).reshape(B * T, H, W, C)
+    y = jax.lax.reduce_window(xf, -jnp.inf, jax.lax.max,
+                              (1, window, window, 1),
+                              (1, window, window, 1), "VALID")
+    return jnp.swapaxes(
+        y.reshape(B, T, H // window, W // window, C), 0, 1)

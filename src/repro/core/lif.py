@@ -1,0 +1,75 @@
+"""Leaky Integrate-and-Fire neurons with surrogate gradients (paper §IV-B).
+
+Discrete-time LIF (forward-Euler of eq. (1) with R·I folded into the
+input current):
+
+    u_t = decay * (u_{t-1} - v_reset) + v_reset + I_t      (integrate+leak)
+    s_t = H(u_t - v_th)                                     (fire)
+    u_t = u_t * (1 - s_t) + v_reset * s_t                   (hard reset)
+
+with decay = exp(-1/tau_m).  The Heaviside H is non-differentiable; the
+backward pass uses the sigmoid surrogate  H'(x) ≈ β·σ(βx)·(1-σ(βx))
+enabling BPTT + AdamW exactly as the paper trains its backbones.
+
+``lif_scan`` is the multi-step form: input currents for all T timesteps,
+scan keeps the membrane potential as carry.  Its Pallas twin
+(`repro.kernels.lif_scan`) keeps u resident in VMEM across timesteps —
+the TPU translation of the paper's event-driven energy argument.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def spike(x, beta: float = 4.0):
+    """Heaviside with sigmoid surrogate gradient."""
+    return (x >= 0).astype(x.dtype)
+
+
+def _spike_fwd(x, beta):
+    return spike(x, beta), x
+
+
+def _spike_bwd(beta, x, g):
+    s = jax.nn.sigmoid(beta * x)
+    return (g * beta * s * (1.0 - s),)
+
+
+spike.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_step(u, i_t, *, tau: float, v_th: float, v_reset: float,
+             beta: float) -> Tuple[jax.Array, jax.Array]:
+    """One LIF timestep. u: membrane potential; i_t: input current."""
+    decay = jnp.exp(-1.0 / tau).astype(u.dtype)
+    u = decay * (u - v_reset) + v_reset + i_t
+    s = spike(u - v_th, beta)
+    u = u * (1.0 - s) + v_reset * s
+    return u, s
+
+
+def lif_scan(currents, *, tau: float = 2.0, v_th: float = 1.0,
+             v_reset: float = 0.0, beta: float = 4.0, u0=None):
+    """Multi-step LIF. currents: [T, ...] -> spikes [T, ...].
+
+    Pure-jnp reference; `repro.kernels.ops.lif_scan_op` dispatches to the
+    Pallas kernel on TPU.
+    """
+    if u0 is None:
+        u0 = jnp.full(currents.shape[1:], v_reset, currents.dtype)
+
+    def step(u, i_t):
+        u, s = lif_step(u, i_t, tau=tau, v_th=v_th, v_reset=v_reset,
+                        beta=beta)
+        return u, s
+
+    # T is small (3-10 bins): full unroll — better fusion, and XLA's
+    # cost model sees every step (no hidden while body)
+    _, spikes = jax.lax.scan(step, u0, currents,
+                             unroll=currents.shape[0])
+    return spikes

@@ -1,0 +1,65 @@
+"""The NPU (paper §IV): spiking backbone + YOLO detection head + the
+cognitive control head that closes the loop to the ISP (§VI).
+
+``npu_forward`` returns detections *and* the ISP control vector, exactly
+the dual role the paper gives the NPU: detect objects from DVS events and
+emit parameter-adjustment instructions from the scene's lighting/motion
+profile.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SNNConfig
+from repro.core.backbones import BACKBONES, backbone_out_channels
+from repro.core.layers import (apply_spiking_dense, init_spiking_dense)
+from repro.core.sparsity import activity_sparsity, tile_skip_fraction
+from repro.core.yolo import apply_yolo_head, init_yolo_head
+
+
+class NPUOutput(NamedTuple):
+    raw_pred: jax.Array        # [B, h, w, A, 5+nc] detection head output
+    control: jax.Array         # [B, control_dim] in [0, 1]
+    sparsity: jax.Array        # scalar: network activity sparsity
+    tile_skip: jax.Array       # scalar: TPU tile-skip fraction
+
+
+def init_npu(rng, cfg: SNNConfig) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    init_bb, _ = BACKBONES[cfg.backbone]
+    cout = backbone_out_channels(cfg)
+    p: Dict[str, Any] = {"backbone": init_bb(k1, cfg)}
+    if cfg.detect:
+        p["head"] = init_yolo_head(k2, cout, cfg)
+    else:
+        p["cls"] = init_spiking_dense(k2, cout, cfg.num_classes)
+    p["ctrl_hidden"] = init_spiking_dense(k3, cout, 64)
+    p["ctrl_out"] = init_spiking_dense(k4, 64, cfg.control_dim)
+    return p
+
+
+def npu_forward(params, voxels, cfg: SNNConfig) -> NPUOutput:
+    """voxels: [T, B, H, W, 2] (from repro.core.encoding)."""
+    _, apply_bb = BACKBONES[cfg.backbone]
+    feats = apply_bb(params["backbone"], voxels, cfg)  # [T,B,h,w,C]
+
+    if cfg.detect:
+        raw = apply_yolo_head(params["head"], feats, cfg)
+    else:
+        pooled_t = jnp.mean(feats, axis=(2, 3))        # [T,B,C]
+        logits = apply_spiking_dense(params["cls"], pooled_t, cfg,
+                                     fire=False)
+        raw = jnp.mean(logits, axis=0)                 # [B, nc]
+
+    # cognitive control head: scene lighting/motion profile -> ISP params
+    pooled = jnp.mean(feats, axis=(2, 3))              # [T,B,C]
+    h = apply_spiking_dense(params["ctrl_hidden"], pooled, cfg)
+    ctrl = apply_spiking_dense(params["ctrl_out"], h, cfg, fire=False)
+    ctrl = jax.nn.sigmoid(jnp.mean(ctrl, axis=0))      # [B, control_dim]
+
+    return NPUOutput(raw_pred=raw, control=ctrl,
+                     sparsity=activity_sparsity([feats]),
+                     tile_skip=tile_skip_fraction(feats))

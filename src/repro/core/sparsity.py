@@ -1,0 +1,41 @@
+"""Spike-sparsity metrics (paper §IV-C: MobileNet reaches 48.08% network
+sparsity — inactive neurons = energy saved on neuromorphic/TPU-tile-skip
+hardware)."""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparsityTape:
+    """Collects per-layer spike rates during a forward pass."""
+
+    def __init__(self):
+        self.records: List[Tuple[str, jax.Array]] = []
+
+    def record(self, name: str, spikes: jax.Array):
+        self.records.append((name, jnp.mean(spikes)))
+
+    def summary(self) -> Dict[str, float]:
+        out = {n: float(r) for n, r in self.records}
+        if out:
+            out["network_sparsity"] = 1.0 - sum(out.values()) / len(out)
+        return out
+
+
+def activity_sparsity(spike_tensors: List[jax.Array]) -> jax.Array:
+    """1 - mean firing rate across all recorded layers (jit-safe)."""
+    rates = [jnp.mean(s) for s in spike_tensors]
+    return 1.0 - sum(rates) / max(len(rates), 1)
+
+
+def tile_skip_fraction(spikes: jax.Array, tile: int = 128) -> jax.Array:
+    """Fraction of (flattened) length-`tile` activation tiles that are
+    all-zero — the granularity at which the TPU spike_matmul kernel can
+    actually skip MXU work (DESIGN.md §2)."""
+    flat = spikes.reshape(-1)
+    n = (flat.shape[0] // tile) * tile
+    tiles = flat[:n].reshape(-1, tile)
+    return jnp.mean(jnp.all(tiles == 0, axis=-1).astype(jnp.float32))

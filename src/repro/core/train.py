@@ -1,0 +1,71 @@
+"""Training steps for the SNN stack (surrogate-gradient BPTT + AdamW,
+paper §IV-B) — detection training and cognitive-loop control training.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SNNConfig
+from repro.core.cognitive import cognitive_step, exposure_reward
+from repro.core.encoding import voxel_batch
+from repro.core.npu import npu_forward
+from repro.core.yolo import yolo_loss
+from repro.data.synthetic import SceneBatch
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+
+class SNNTrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+    step: jax.Array
+
+
+def init_snn_state(params, opt_cfg: AdamWConfig) -> SNNTrainState:
+    return SNNTrainState(params=params, opt=adamw_init(params, opt_cfg),
+                         step=jnp.zeros((), jnp.int32))
+
+
+def detection_loss(params, scene: SceneBatch, cfg: SNNConfig):
+    vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                      height=cfg.height, width=cfg.width)
+    out = npu_forward(params, vox, cfg)
+    loss, parts = yolo_loss(out.raw_pred, scene.boxes, scene.valid, cfg)
+    parts["sparsity"] = out.sparsity
+    parts["tile_skip"] = out.tile_skip
+    return loss, parts
+
+
+def cognitive_loss(params, scene: SceneBatch, cfg: SNNConfig):
+    """Detection + control: the ISP output should match the clean scene
+    (differentiable through the whole pipeline — something the FPGA can't
+    do; on TPU the cognitive loop is trained end-to-end)."""
+    vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                      height=cfg.height, width=cfg.width)
+    out = cognitive_step(params, vox, scene.bayer, cfg)
+    det_loss, parts = yolo_loss(out.npu.raw_pred, scene.boxes, scene.valid,
+                                cfg)
+    recon = jnp.mean(jnp.square(out.rgb - scene.clean_rgb))
+    reward = jnp.mean(exposure_reward(out.rgb))
+    total = det_loss + 10.0 * recon - 0.1 * reward
+    parts.update({"recon": recon, "reward": reward, "det": det_loss})
+    return total, parts
+
+
+def make_snn_train_step(cfg: SNNConfig, opt_cfg: AdamWConfig,
+                        mode: str = "detect", lr_schedule=None):
+    loss_fn = detection_loss if mode == "detect" else cognitive_loss
+
+    def step(state: SNNTrainState, scene: SceneBatch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, scene, cfg)
+        params, opt, om = adamw_update(state.params, grads, state.opt,
+                                       opt_cfg, lr_schedule)
+        parts = dict(parts)
+        parts.update(om)
+        parts["loss"] = loss
+        return SNNTrainState(params, opt, state.step + 1), parts
+
+    return step

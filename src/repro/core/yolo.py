@@ -1,0 +1,177 @@
+"""Spiking-YOLO detection head, loss and AP@0.5 evaluation (paper §IV-C).
+
+Rate decoding: the head conv integrates spikes without firing (standard
+"analog readout" for SNN detectors) and predictions are the temporal
+mean — matching how the paper's quantized Spiking YOLO reports
+AP@IoU0.50.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SNNConfig
+from repro.core.layers import apply_spiking_conv, init_spiking_conv
+
+# anchors as (w, h) fractions of the image
+ANCHORS = ((0.15, 0.15), (0.4, 0.4))
+
+
+def init_yolo_head(rng, cin: int, cfg: SNNConfig):
+    nout = cfg.num_anchors * (5 + cfg.num_classes)
+    k1, k2 = jax.random.split(rng)
+    return {"conv": init_spiking_conv(k1, cin, cin, kernel=3),
+            "pred": init_spiking_conv(k2, cin, nout, kernel=1)}
+
+
+def apply_yolo_head(p, feats, cfg: SNNConfig):
+    """feats: [T, B, h, w, C] -> raw predictions [B, h, w, A, 5+nc]."""
+    x = apply_spiking_conv(p["conv"], feats, cfg)
+    x = apply_spiking_conv(p["pred"], x, cfg, fire=False)   # analog readout
+    x = jnp.mean(x, axis=0)                                  # rate decode
+    B, h, w, _ = x.shape
+    return x.reshape(B, h, w, cfg.num_anchors, 5 + cfg.num_classes)
+
+
+def decode_boxes(raw, cfg: SNNConfig):
+    """raw: [B,h,w,A,5+nc] -> (boxes [B,h*w*A,4] xyxy-normalised,
+    scores [B,h*w*A], classes [B,h*w*A])."""
+    B, h, w, A, _ = raw.shape
+    gy, gx = jnp.meshgrid(jnp.arange(h), jnp.arange(w), indexing="ij")
+    cx = (jax.nn.sigmoid(raw[..., 0]) + gx[None, :, :, None]) / w
+    cy = (jax.nn.sigmoid(raw[..., 1]) + gy[None, :, :, None]) / h
+    anchors = jnp.asarray(ANCHORS)
+    bw = anchors[:, 0] * jnp.exp(jnp.clip(raw[..., 2], -4, 4))
+    bh = anchors[:, 1] * jnp.exp(jnp.clip(raw[..., 3], -4, 4))
+    obj = jax.nn.sigmoid(raw[..., 4])
+    cls_prob = jax.nn.softmax(raw[..., 5:], axis=-1)
+    score = obj * jnp.max(cls_prob, axis=-1)
+    cls = jnp.argmax(cls_prob, axis=-1)
+    boxes = jnp.stack([cx - bw / 2, cy - bh / 2, cx + bw / 2, cy + bh / 2],
+                      axis=-1)
+    n = h * w * A
+    return (boxes.reshape(B, n, 4), score.reshape(B, n), cls.reshape(B, n))
+
+
+def _assign_targets(gt_boxes, gt_valid, h: int, w: int, cfg: SNNConfig):
+    """gt_boxes: [M, 5] (cls, cx, cy, bw, bh normalised); -> target grid
+    [h, w, A, 5+nc] + mask [h, w, A]."""
+    A = cfg.num_anchors
+    anchors = jnp.asarray(ANCHORS)
+    tgt = jnp.zeros((h, w, A, 5 + cfg.num_classes))
+    msk = jnp.zeros((h, w, A), bool)
+
+    def add(carry, gt):
+        tgt, msk = carry
+        cls, cx, cy, bw, bh, valid = gt
+        gi = jnp.clip((cx * w).astype(jnp.int32), 0, w - 1)
+        gj = jnp.clip((cy * h).astype(jnp.int32), 0, h - 1)
+        # best anchor by shape IoU
+        inter = jnp.minimum(bw, anchors[:, 0]) * jnp.minimum(bh, anchors[:, 1])
+        union = bw * bh + anchors[:, 0] * anchors[:, 1] - inter
+        a = jnp.argmax(inter / jnp.maximum(union, 1e-9))
+        tx = cx * w - gi
+        ty = cy * h - gj
+        tw = jnp.log(jnp.maximum(bw / anchors[a, 0], 1e-6))
+        th = jnp.log(jnp.maximum(bh / anchors[a, 1], 1e-6))
+        onehot = jax.nn.one_hot(cls.astype(jnp.int32), cfg.num_classes)
+        row = jnp.concatenate([jnp.stack([tx, ty, tw, th,
+                                          jnp.float32(1.0)]), onehot])
+        vb = valid > 0
+        tgt = jnp.where(vb, tgt.at[gj, gi, a].set(row), tgt)
+        msk = jnp.where(vb, msk.at[gj, gi, a].set(True), msk)
+        return (tgt, msk), None
+
+    gt_all = jnp.concatenate([gt_boxes, gt_valid[:, None].astype(jnp.float32)],
+                             axis=-1)
+    (tgt, msk), _ = jax.lax.scan(add, (tgt, msk), gt_all)
+    return tgt, msk
+
+
+def yolo_loss(raw, gt_boxes, gt_valid, cfg: SNNConfig):
+    """raw: [B,h,w,A,5+nc]; gt_boxes: [B,M,5]; gt_valid: [B,M]."""
+    B, h, w, A, _ = raw.shape
+    tgt, msk = jax.vmap(lambda b, v: _assign_targets(b, v, h, w, cfg))(
+        gt_boxes, gt_valid)
+    mf = msk.astype(jnp.float32)
+    npos = jnp.maximum(jnp.sum(mf), 1.0)
+
+    xy_pred = jax.nn.sigmoid(raw[..., 0:2])
+    xy_loss = jnp.sum(mf[..., None] * (xy_pred - tgt[..., 0:2]) ** 2) / npos
+    wh_loss = jnp.sum(mf[..., None] * (raw[..., 2:4] - tgt[..., 2:4]) ** 2) \
+        / npos
+    obj_logit = raw[..., 4]
+    obj_loss = jnp.mean(
+        (1 - mf) * jax.nn.softplus(obj_logit)) + \
+        jnp.sum(mf * jax.nn.softplus(-obj_logit)) / npos
+    cls_logp = jax.nn.log_softmax(raw[..., 5:], axis=-1)
+    cls_loss = -jnp.sum(mf[..., None] * tgt[..., 5:] * cls_logp) / npos
+    return 5.0 * xy_loss + 5.0 * wh_loss + obj_loss + cls_loss, {
+        "xy": xy_loss, "wh": wh_loss, "obj": obj_loss, "cls": cls_loss}
+
+
+# ---------------------------------------------------------------------------
+# AP@0.5 (numpy, offline eval)
+# ---------------------------------------------------------------------------
+
+def _iou_np(a, b):
+    """a: [N,4], b: [M,4] xyxy -> [N,M]."""
+    lt = np.maximum(a[:, None, :2], b[None, :, :2])
+    rb = np.minimum(a[:, None, 2:], b[None, :, 2:])
+    wh = np.clip(rb - lt, 0, None)
+    inter = wh[..., 0] * wh[..., 1]
+    ar_a = (a[:, 2] - a[:, 0]) * (a[:, 3] - a[:, 1])
+    ar_b = (b[:, 2] - b[:, 0]) * (b[:, 3] - b[:, 1])
+    return inter / np.maximum(ar_a[:, None] + ar_b[None] - inter, 1e-9)
+
+
+def average_precision(pred_boxes: List[np.ndarray],
+                      pred_scores: List[np.ndarray],
+                      gt_boxes: List[np.ndarray],
+                      iou_thresh: float = 0.5,
+                      score_thresh: float = 0.05) -> float:
+    """Dataset AP@IoU (single class; per-class AP averages over calls)."""
+    records = []   # (score, is_tp)
+    n_gt = 0
+    for pb, ps, gb in zip(pred_boxes, pred_scores, gt_boxes):
+        keep = ps >= score_thresh
+        pb, ps = pb[keep], ps[keep]
+        order = np.argsort(-ps)
+        pb, ps = pb[order], ps[order]
+        # greedy NMS
+        sel = []
+        for i in range(len(pb)):
+            if all(_iou_np(pb[i:i + 1], pb[j:j + 1])[0, 0] < 0.5
+                   for j in sel):
+                sel.append(i)
+        pb, ps = pb[sel], ps[sel]
+        n_gt += len(gb)
+        matched = np.zeros(len(gb), bool)
+        for i in range(len(pb)):
+            if len(gb) == 0:
+                records.append((ps[i], False))
+                continue
+            ious = _iou_np(pb[i:i + 1], gb)[0]
+            j = int(np.argmax(ious))
+            if ious[j] >= iou_thresh and not matched[j]:
+                matched[j] = True
+                records.append((ps[i], True))
+            else:
+                records.append((ps[i], False))
+    if n_gt == 0 or not records:
+        return 0.0
+    records.sort(key=lambda r: -r[0])
+    tps = np.cumsum([r[1] for r in records])
+    fps = np.cumsum([not r[1] for r in records])
+    recall = tps / n_gt
+    precision = tps / np.maximum(tps + fps, 1)
+    # VOC-style continuous integration
+    ap, prev_r = 0.0, 0.0
+    max_p = np.maximum.accumulate(precision[::-1])[::-1]
+    for r, p in zip(recall, max_p):
+        ap += (r - prev_r) * p
+        prev_r = r
+    return float(ap)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SceneBatch, make_scene_batch,  # noqa: F401
+                                  make_token_batch)

@@ -1,0 +1,140 @@
+"""Synthetic GEN1-like scenes: moving objects -> DVS events + Bayer frame
++ detection ground truth.
+
+Prophesee GEN1 is not shippable in this container; the generator
+reproduces its *structure* (automotive-style moving rigid objects of two
+classes, asynchronous brightness-change events, boxes as labels) with
+controllable photometry so the cognitive-loop experiments can vary
+lighting (paper §VI).  Everything is deterministic in the PRNG key.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import EventStream
+
+
+class SceneBatch(NamedTuple):
+    events: EventStream      # leaves [B, N]
+    bayer: jax.Array         # [B, H, W] RGGB mosaic (noisy, miscoloured)
+    boxes: jax.Array         # [B, M, 5] (cls, cx, cy, w, h) normalised
+    valid: jax.Array         # [B, M] bool
+    clean_rgb: jax.Array     # [B, H, W, 3] ground-truth image (for PSNR)
+
+
+def _render_boxes(boxes, valid, H, W):
+    """Rasterise filled boxes -> luminance [H, W] + rgb [H, W, 3]."""
+    yy, xx = jnp.meshgrid(jnp.linspace(0, 1, H), jnp.linspace(0, 1, W),
+                          indexing="ij")
+    img = jnp.full((H, W, 3), 0.45)
+
+    def paint(img, b):
+        cls, cx, cy, bw, bh, v = b
+        inside = ((jnp.abs(xx - cx) < bw / 2) & (jnp.abs(yy - cy) < bh / 2)
+                  & (v > 0))
+        color = jnp.where(cls > 0.5,
+                          jnp.array([0.85, 0.3, 0.25]),    # pedestrian-ish
+                          jnp.array([0.25, 0.45, 0.85]))   # car-ish
+        return jnp.where(inside[..., None], color, img), None
+
+    bb = jnp.concatenate([boxes, valid[:, None].astype(jnp.float32)], -1)
+    img, _ = jax.lax.scan(paint, img, bb)
+    return img
+
+
+def _events_from_motion(rng, boxes, valid, vel, n_events, H, W,
+                        time_steps: int):
+    """Events fire at moving object edges: sample points along each box
+    boundary at sub-window times, polarity from the motion direction."""
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    M = boxes.shape[0]
+    per = n_events // M
+    t = jax.random.uniform(k1, (M, per))
+    # choose an edge point of the (moving) box at event time
+    u = jax.random.uniform(k2, (M, per))
+    side = jax.random.randint(k3, (M, per), 0, 4)
+    cx = boxes[:, 1:2] + vel[:, 0:1] * (t - 0.5) * 0.2
+    cy = boxes[:, 2:3] + vel[:, 1:2] * (t - 0.5) * 0.2
+    bw, bh = boxes[:, 3:4], boxes[:, 4:5]
+    ex = jnp.where(side % 2 == 0, cx + (u - 0.5) * bw,
+                   cx + jnp.where(side == 1, bw / 2, -bw / 2))
+    ey = jnp.where(side % 2 == 1, cy + (u - 0.5) * bh,
+                   cy + jnp.where(side == 0, -bh / 2, bh / 2))
+    # polarity: leading edge ON, trailing edge OFF (w.r.t. velocity)
+    lead = (ex - cx) * vel[:, 0:1] + (ey - cy) * vel[:, 1:2] > 0
+    pol = lead.astype(jnp.int32)
+    x = jnp.clip((ex * W).astype(jnp.int32), 0, W - 1)
+    y = jnp.clip((ey * H).astype(jnp.int32), 0, H - 1)
+    ok = valid[:, None] & (jnp.abs(vel).sum(-1, keepdims=True) > 0.05)
+    # background noise events (sensor noise)
+    noise = jax.random.uniform(k4, (M, per)) < 0.02
+    ok = ok | noise
+    return EventStream(t=t.reshape(-1), x=x.reshape(-1), y=y.reshape(-1),
+                       p=pol.reshape(-1), valid=ok.reshape(-1))
+
+
+def make_scene(rng, *, height: int = 64, width: int = 64,
+               max_boxes: int = 4, n_events: int = 2048,
+               time_steps: int = 5, lighting: float = 1.0,
+               wb_drift: Tuple[float, float] = (1.0, 1.0),
+               noise_sigma: float = 0.02,
+               defect_rate: float = 0.002):
+    ks = jax.random.split(rng, 8)
+    M = max_boxes
+    n_obj = jax.random.randint(ks[0], (), 1, M + 1)
+    cls = jax.random.bernoulli(ks[1], 0.5, (M,)).astype(jnp.float32)
+    cxy = jax.random.uniform(ks[2], (M, 2), minval=0.2, maxval=0.8)
+    wh = jax.random.uniform(ks[3], (M, 2), minval=0.12, maxval=0.35)
+    boxes = jnp.concatenate([cls[:, None], cxy, wh], axis=-1)
+    valid = jnp.arange(M) < n_obj
+    vel = jax.random.uniform(ks[4], (M, 2), minval=-1.0, maxval=1.0)
+
+    events = _events_from_motion(ks[5], boxes, valid, vel, n_events,
+                                 height, width, time_steps)
+
+    clean = _render_boxes(boxes, valid, height, width)
+    # photometric corruption the ISP must undo. clean_rgb is the
+    # display-referred ground truth; the sensor captures linear light
+    # (display^2.2), which the ISP's default gamma LUT decodes back.
+    lit = jnp.clip(clean * lighting, 0.0, 1.0)
+    drift = jnp.array([wb_drift[0], 1.0, wb_drift[1]])
+    shifted = jnp.clip(lit * drift, 0.0, 1.0) ** 2.2
+    # mosaic (RGGB) + noise + defective pixels
+    from repro.isp.demosaic import bayer_phases
+    is_r, is_g1, is_g2, is_b = bayer_phases(height, width)
+    mosaic = jnp.where(is_r, shifted[..., 0],
+                       jnp.where(is_b, shifted[..., 2], shifted[..., 1]))
+    mosaic = mosaic + noise_sigma * jax.random.normal(ks[6], mosaic.shape)
+    defects = jax.random.uniform(ks[7], mosaic.shape) < defect_rate
+    hot = jax.random.uniform(ks[0], mosaic.shape) > 0.5
+    mosaic = jnp.where(defects, jnp.where(hot, 1.0, 0.0), mosaic)
+    mosaic = jnp.clip(mosaic, 0.0, 1.0)
+
+    return events, mosaic, boxes, valid, clean
+
+
+def make_scene_batch(rng, batch: int = 8, **kw) -> SceneBatch:
+    keys = jax.random.split(rng, batch)
+    ev, bayer, boxes, valid, clean = jax.vmap(
+        lambda k: make_scene(k, **kw))(keys)
+    return SceneBatch(events=ev, bayer=bayer, boxes=boxes, valid=valid,
+                      clean_rgb=clean)
+
+
+# ---------------------------------------------------------------------------
+# LM token stream (synthetic, deterministic)
+# ---------------------------------------------------------------------------
+
+def make_token_batch(rng, batch: int, seq: int, vocab: int):
+    """Markov-ish synthetic tokens: learnable structure, not uniform."""
+    k1, k2 = jax.random.split(rng)
+    base = jax.random.randint(k1, (batch, seq), 0, vocab)
+    # inject copy structure: token[t] often equals token[t-1]+1 (mod V)
+    rep = jax.random.bernoulli(k2, 0.5, (batch, seq))
+    shifted = jnp.concatenate([base[:, :1], (base[:, :-1] + 1) % vocab], 1)
+    tokens = jnp.where(rep, shifted, base)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    return {"tokens": tokens, "labels": labels}

@@ -1,0 +1,1 @@
+from repro.distributed.sharding import MeshAxes, shard, param_sharding_rules  # noqa: F401

@@ -1,0 +1,79 @@
+"""Pipeline parallelism: GPipe-style microbatch executor over a ``pipe``
+mesh axis, built on shard_map + ppermute.
+
+For >2-pod deployments the pod axis can be repurposed as a pipeline
+axis: layers are partitioned into S stages; microbatches flow through
+the stage ring with ``collective-permute`` boundaries.  The schedule is
+the classic GPipe fill-drain loop expressed as one ``lax.scan`` over
+(num_microbatches + num_stages - 1) ticks, so the compiled HLO is
+schedule-length independent.
+
+Bubble fraction = (S-1)/(M+S-1); the runner picks M >= 4*S by default.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, params_stacked, x_micro,
+                     mesh: Mesh, axis: str = "pipe"):
+    """Run microbatches through the stage ring.
+
+    stage_fn(stage_params, x) -> x   (same shape in/out);
+    params_stacked: pytree with leading dim = n_stages (stage s's params
+    live on pipe-rank s);
+    x_micro: [M, mb, ...] microbatches (resident on stage 0).
+    Returns y_micro [M, mb, ...] (resident on the last stage).
+    """
+    from jax.experimental.shard_map import shard_map
+    S = mesh.shape[axis]
+    M = x_micro.shape[0]
+    ticks = M + S - 1
+
+    def body(params, xs):
+        # each pipe rank holds its stage slice: strip the leading dim
+        params = jax.tree_util.tree_map(lambda p: p[0], params)
+        rank = jax.lax.axis_index(axis)
+        perm = [(i, (i + 1) % S) for i in range(S)]
+
+        def tick(carry, t):
+            buf, outs = carry          # buf: [mb, ...] current activation
+            # stage 0 injects microbatch t (if any remain)
+            inject = jax.lax.dynamic_index_in_dim(
+                xs, jnp.clip(t, 0, M - 1), axis=0, keepdims=False)
+            buf = jnp.where(rank == 0, jnp.where(t < M, inject, buf), buf)
+            y = stage_fn(params, buf)
+            # last stage records its finished microbatch (t - (S-1))
+            out_idx = t - (S - 1)
+            outs = jax.lax.cond(
+                (out_idx >= 0) & (rank == S - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, y, jnp.clip(out_idx, 0, M - 1), axis=0),
+                lambda o: o, outs)
+            # rotate activations around the ring
+            buf = jax.lax.ppermute(y, axis, perm)
+            return (buf, outs), None
+
+        buf0 = jnp.zeros_like(xs[0])
+        outs0 = jnp.zeros_like(xs)
+        (_, outs), _ = jax.lax.scan(tick, (buf0, outs0),
+                                    jnp.arange(ticks))
+        return outs[None]          # [1, M, mb, ...] per rank
+
+    pspec = jax.tree_util.tree_map(lambda _: P(axis), params_stacked)
+    gathered = shard_map(
+        body, mesh=mesh,
+        in_specs=(pspec, P()),
+        out_specs=P(axis),          # [S, M, mb, ...]
+        check_rep=False,
+    )(params_stacked, x_micro)
+    return gathered[-1]             # finished microbatches live on the
+                                    # last stage
+
+
+def bubble_fraction(n_stages: int, n_micro: int) -> float:
+    return (n_stages - 1) / (n_micro + n_stages - 1)

@@ -1,0 +1,226 @@
+"""Mesh-axis plumbing and parameter sharding rules.
+
+Conventions
+-----------
+Mesh axes: single pod ``("data", "model")``; multi-pod ``("pod", "data",
+"model")``.  Batch/tokens shard over all data-parallel axes (``dp``);
+tensor/expert parallelism uses the ``tp`` axis ("model").
+
+Weights are 2D-sharded: ZeRO-3 over ``dp`` on one dim and tensor-parallel
+over ``tp`` on the other, so per-device bytes scale as 1/(dp*tp).  XLA
+inserts the per-layer all-gathers (FSDP semantics) inside the layer scan.
+
+All model code threads a :class:`MeshAxes` through; with ``mesh=None``
+every helper degrades to a local no-op so the same code runs single-device
+in unit tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    """Which mesh axes play which logical role. ``mesh=None`` => local."""
+    mesh: Optional[Mesh] = None
+    dp: Tuple[str, ...] = ()       # data-parallel axes, e.g. ("pod","data")
+    tp: Optional[str] = None       # tensor/expert-parallel axis ("model")
+    zero: bool = True              # ZeRO-shard params over dp (False =>
+                                   # replicate: small-model fast path)
+
+    @property
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def tp_size(self) -> int:
+        if self.mesh is None or self.tp is None:
+            return 1
+        return self.mesh.shape[self.tp]
+
+    @property
+    def dp_spec(self) -> Optional[AxisName]:
+        """PartitionSpec entry for a batch/token dim."""
+        if not self.dp:
+            return None
+        return self.dp if len(self.dp) > 1 else self.dp[0]
+
+
+def from_mesh(mesh: Optional[Mesh]) -> MeshAxes:
+    """Derive roles from a mesh by axis name."""
+    if mesh is None:
+        return MeshAxes()
+    names = mesh.axis_names
+    dp = tuple(n for n in names if n in ("pod", "data", "replica"))
+    tp = "model" if "model" in names else None
+    return MeshAxes(mesh=mesh, dp=dp, tp=tp)
+
+
+def shard(x, ax: MeshAxes, *spec):
+    """``with_sharding_constraint`` that no-ops without a mesh.
+
+    ``spec`` entries may be None, an axis name, or a tuple of axis names.
+    Entries naming axes the mesh lacks are dropped.
+    """
+    if ax.mesh is None:
+        return x
+    cleaned = []
+    names = set(ax.mesh.axis_names)
+    for s in spec:
+        if s is None:
+            cleaned.append(None)
+        elif isinstance(s, tuple):
+            t = tuple(a for a in s if a in names)
+            cleaned.append(t if t else None)
+        else:
+            cleaned.append(s if s in names else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ax.mesh, P(*cleaned)))
+
+
+def maybe_psum(x, axis: Optional[str]):
+    """psum over ``axis`` when inside shard_map; identity otherwise."""
+    if axis is None:
+        return x
+    return jax.lax.psum(x, axis)
+
+
+def maybe_all_gather(x, axis: Optional[str], gather_axis: int):
+    if axis is None:
+        return x
+    return jax.lax.all_gather(x, axis, axis=gather_axis, tiled=True)
+
+
+def axis_index(axis: Optional[str]):
+    if axis is None:
+        return jnp.int32(0)
+    return jax.lax.axis_index(axis)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding rules (path-name based)
+# ---------------------------------------------------------------------------
+
+# Substring rules applied to the '/'-joined param path.  First match wins.
+# Specs are written for the *unstacked* layer params; scanned stacks get a
+# leading None prepended automatically (leading axis = layer-stack).
+# "DP" / "TP" placeholders are resolved against the MeshAxes.
+_RULES: Sequence[Tuple[str, Tuple]] = (
+    # embeddings / output head: (vocab, d_model)
+    ("tok_embed",        ("TP", "DP")),
+    ("lm_head",          ("TP", "DP")),
+    ("pos_embed",        (None, "TP")),
+    ("frontend_proj",    ("DP", "TP")),
+    # attention
+    ("attn/wq",          ("DP", "TP")),
+    ("attn/wk",          ("DP", "TP")),
+    ("attn/wv",          ("DP", "TP")),
+    ("attn/wo",          ("TP", "DP")),
+    ("attn/bq",          ("TP",)),
+    ("attn/bk",          ("TP",)),
+    ("attn/bv",          ("TP",)),
+    # MLA
+    ("mla/wq_a",         ("DP", None)),
+    ("mla/wq_b",         ("DP", "TP")),
+    ("mla/wkv_a",        ("DP", None)),
+    ("mla/wkv_b",        ("DP", "TP")),
+    ("mla/wo",           ("TP", "DP")),
+    # dense mlp
+    ("mlp/wi",           ("DP", "TP")),
+    ("mlp/wg",           ("DP", "TP")),
+    ("mlp/wo",           ("TP", "DP")),
+    # MoE: experts sharded over TP (expert parallelism), ZeRO over DP
+    ("moe/router",       (None, None)),
+    ("moe/wi",           ("TP", "DP", None)),
+    ("moe/wg",           ("TP", "DP", None)),
+    ("moe/wo",           ("TP", None, "DP")),
+    ("moe/shared_wi",    ("DP", "TP")),
+    ("moe/shared_wg",    ("DP", "TP")),
+    ("moe/shared_wo",    ("TP", "DP")),
+    # mamba: d_inner sharded over TP
+    ("mamba/in_proj",    ("DP", "TP")),
+    ("mamba/conv_w",     (None, "TP")),
+    ("mamba/conv_b",     ("TP",)),
+    ("mamba/x_proj",     ("TP", "DP")),
+    ("mamba/dt_proj",    ("DP", "TP")),
+    ("mamba/dt_bias",    ("TP",)),
+    ("mamba/A_log",      ("TP", None)),
+    ("mamba/D",          ("TP",)),
+    ("mamba/out_proj",   ("TP", "DP")),
+    # xlstm
+    ("mlstm/w_qkv",      ("DP", "TP")),
+    ("mlstm/w_gates",    ("DP", "TP")),
+    ("mlstm/out_proj",   ("TP", "DP")),
+    ("slstm/",           (None, None)),
+    # norms / scalars: replicated
+    ("norm",             None),
+    ("scale",            None),
+    ("bias",             None),
+)
+
+
+def _resolve(entry, ax: MeshAxes):
+    if entry == "DP":
+        return ax.dp_spec if ax.zero else None
+    if entry == "TP":
+        return ax.tp
+    return entry
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], ax: MeshAxes) -> P:
+    """PartitionSpec for one param. Falls back to replicated."""
+    ndim = len(shape)
+    for key, rule in _RULES:
+        if key in path:
+            if rule is None:
+                return P()
+            rule = tuple(rule)
+            # scanned stacks carry extra leading dims
+            pad = ndim - len(rule)
+            full = (None,) * pad + tuple(_resolve(r, ax) for r in rule)
+            # drop shard on dims not divisible by axis size
+            out = []
+            for dim, s in zip(shape, full):
+                if s is None:
+                    out.append(None)
+                    continue
+                size = 1
+                for a in (s if isinstance(s, tuple) else (s,)):
+                    size *= ax.mesh.shape[a] if ax.mesh else 1
+                out.append(s if size > 0 and dim % size == 0 else None)
+            return P(*out)
+    return P()
+
+
+def param_sharding_rules(params, ax: MeshAxes):
+    """Map a param pytree -> pytree of NamedSharding (or None w/o mesh)."""
+    if ax.mesh is None:
+        return jax.tree_util.tree_map(lambda _: None, params)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        spec = spec_for_path(path, tuple(leaf.shape), ax)
+        out.append(NamedSharding(ax.mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)

@@ -1,0 +1,1 @@
+from repro.isp.pipeline import ISPParams, isp_pipeline, control_to_params  # noqa: F401

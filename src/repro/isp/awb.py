@@ -1,0 +1,34 @@
+"""Auto / manual White Balance (paper §V-B.2).
+
+The FPGA state machine accumulates channel statistics while discarding
+over/under-exposed pixels, then applies gains.  Same math here, as a
+masked reduction; gains can be overridden (or biased) by the NPU control
+vector — the cognitive-loop hook.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def awb_gains(rgb, lo: float = 0.05, hi: float = 0.95) -> jax.Array:
+    """Grey-world gains from well-exposed pixels. rgb: [H, W, 3]."""
+    lum = jnp.mean(rgb, axis=-1, keepdims=True)
+    ok = ((lum > lo) & (lum < hi)).astype(rgb.dtype)
+    n = jnp.maximum(jnp.sum(ok), 1.0)
+    means = jnp.sum(rgb * ok, axis=(0, 1)) / n
+    g = means[1]
+    return jnp.stack([g / jnp.maximum(means[0], 1e-6),
+                      1.0,
+                      g / jnp.maximum(means[2], 1e-6)])
+
+
+def apply_wb(rgb, gains: jax.Array,
+             npu_bias: Optional[jax.Array] = None) -> jax.Array:
+    """npu_bias: [2] multiplicative r/b corrections from the NPU (in
+    [0.5, 2] after control_to_params scaling)."""
+    if npu_bias is not None:
+        gains = gains * jnp.stack([npu_bias[0], jnp.ones(()), npu_bias[1]])
+    return jnp.clip(rgb * gains, 0.0, 1.0)

@@ -1,0 +1,78 @@
+"""Malvar-He-Cutler linear demosaicing (paper §V-B.3, Getreuer/IPOL).
+
+Exact 5x5 MHC filter bank applied to an RGGB Bayer mosaic.  The FPGA
+implementation streams rows through line buffers; here each of the 8
+filter cases is a 5x5 convolution evaluated everywhere and selected by
+the Bayer phase mask — branch-free, MXU/VPU-friendly.  The Pallas twin
+(`repro.kernels.demosaic`) tiles it with explicit VMEM halos.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# MHC filter bank (scaled by 1/8). Names: target colour at source pixel.
+# G at R/B locations:
+_F_G = np.array([
+    [0, 0, -1, 0, 0],
+    [0, 0, 2, 0, 0],
+    [-1, 2, 4, 2, -1],
+    [0, 0, 2, 0, 0],
+    [0, 0, -1, 0, 0]], np.float32) / 8.0
+
+# R at G in R-row / B-column (and B at G in B-row):
+_F_RB_ROW = np.array([
+    [0, 0, 0.5, 0, 0],
+    [0, -1, 0, -1, 0],
+    [-1, 4, 5, 4, -1],
+    [0, -1, 0, -1, 0],
+    [0, 0, 0.5, 0, 0]], np.float32) / 8.0
+
+# R at G in B-row / R-column:
+_F_RB_COL = _F_RB_ROW.T.copy()
+
+# R at B (and B at R):
+_F_RB_DIAG = np.array([
+    [0, 0, -1.5, 0, 0],
+    [0, 2, 0, 2, 0],
+    [-1.5, 0, 6, 0, -1.5],
+    [0, 2, 0, 2, 0],
+    [0, 0, -1.5, 0, 0]], np.float32) / 8.0
+
+
+def _conv5(img, kernel):
+    k = jnp.asarray(kernel)[::-1, ::-1]
+    return jax.lax.conv_general_dilated(
+        img[None, None], k[None, None], (1, 1), "SAME",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))[0, 0]
+
+
+def bayer_phases(H: int, W: int):
+    """RGGB phase masks: (is_r, is_g1, is_g2, is_b), each [H, W] bool."""
+    yy, xx = jnp.meshgrid(jnp.arange(H), jnp.arange(W), indexing="ij")
+    ey, ex = (yy % 2 == 0), (xx % 2 == 0)
+    return (ey & ex), (ey & ~ex), (~ey & ex), (~ey & ~ex)
+
+
+def demosaic_mhc(raw):
+    """raw: [H, W] RGGB mosaic in [0,1] -> RGB [H, W, 3]."""
+    H, W = raw.shape
+    is_r, is_g1, is_g2, is_b = bayer_phases(H, W)
+
+    g_interp = _conv5(raw, _F_G)
+    rb_row = _conv5(raw, _F_RB_ROW)
+    rb_col = _conv5(raw, _F_RB_COL)
+    rb_diag = _conv5(raw, _F_RB_DIAG)
+
+    # green: native at G sites, interpolated at R/B
+    g = jnp.where(is_r | is_b, g_interp, raw)
+    # red: native at R; row-filter at G1 (R row), col-filter at G2, diag at B
+    r = jnp.where(is_r, raw,
+                  jnp.where(is_g1, rb_row,
+                            jnp.where(is_g2, rb_col, rb_diag)))
+    # blue: mirror of red
+    b = jnp.where(is_b, raw,
+                  jnp.where(is_g2, rb_row,
+                            jnp.where(is_g1, rb_col, rb_diag)))
+    return jnp.clip(jnp.stack([r, g, b], axis=-1), 0.0, 1.0)

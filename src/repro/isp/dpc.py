@@ -1,0 +1,45 @@
+"""Dynamic Defective Pixel Correction (paper §V-B.1, after Yongji &
+Xiaojun 2020).
+
+FPGA version: 5x5 line-buffered window, directional gradients.  TPU
+version: the same 5x5 stencil as a vectorised gather — the line buffer
+becomes the implicit halo of the tiled kernel (see kernels/demosaic for
+the Pallas treatment of the same discipline).
+
+Operates on the raw Bayer mosaic, comparing each pixel against its 8
+same-color neighbours (distance-2 in the mosaic).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _same_color_neighbours(img):
+    """img: [H, W] raw mosaic -> [H, W, 8] distance-2 neighbours."""
+    pads = []
+    for dy in (-2, 0, 2):
+        for dx in (-2, 0, 2):
+            if dy == 0 and dx == 0:
+                continue
+            pads.append(jnp.roll(img, (dy, dx), axis=(0, 1)))
+    return jnp.stack(pads, axis=-1)
+
+
+def dpc_correct(raw, threshold: float = 0.2):
+    """raw: [H, W] in [0,1]. A pixel is defective when it deviates from
+    *every* same-colour neighbour by more than ``threshold`` with a
+    consistent sign (dead/hot), matching the dynamic detection rule."""
+    nb = _same_color_neighbours(raw)
+    diff = raw[..., None] - nb
+    hot = jnp.all(diff > threshold, axis=-1)
+    dead = jnp.all(diff < -threshold, axis=-1)
+    defective = hot | dead
+    # replacement: trimmed mean of the 8 same-colour neighbours (drop
+    # min and max).  Median/sort would be marginally more robust but
+    # their JVPs lower to batched gathers that vmap-of-grad cannot
+    # build on this backend; the trimmed mean is gather-free and equally
+    # effective against salt-and-pepper defects.
+    med = (jnp.sum(nb, axis=-1) - jnp.min(nb, axis=-1)
+           - jnp.max(nb, axis=-1)) / 6.0
+    return jnp.where(defective, med, raw), defective

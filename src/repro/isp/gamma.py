@@ -1,0 +1,54 @@
+"""Gamma correction via LUT + RGB->YCbCr conversion (paper §V-B.5).
+
+The FPGA uses a custom LUT and fixed-point matrix arithmetic; we keep the
+LUT (256 entries, jnp.take — a VMEM table lookup on TPU) so the NPU can
+reshape the curve at runtime without recompilation, and the BT.601
+matrix in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LUT_SIZE = 256
+
+
+def gamma_lut(gamma) -> jax.Array:
+    """Build a LUT for out = in^(1/gamma). gamma may be a traced scalar."""
+    x = jnp.linspace(0.0, 1.0, LUT_SIZE)
+    return x ** (1.0 / jnp.maximum(gamma, 1e-3))
+
+
+def apply_gamma(rgb, lut: jax.Array) -> jax.Array:
+    idx = jnp.clip((rgb * (LUT_SIZE - 1)).astype(jnp.int32), 0, LUT_SIZE - 1)
+    frac = rgb * (LUT_SIZE - 1) - idx
+    lo = jnp.take(lut, idx)
+    hi = jnp.take(lut, jnp.minimum(idx + 1, LUT_SIZE - 1))
+    return lo + frac * (hi - lo)          # linear-interp LUT, like the HDL
+
+
+_RGB2YCBCR = jnp.array([[0.299, 0.587, 0.114],
+                        [-0.168736, -0.331264, 0.5],
+                        [0.5, -0.418688, -0.081312]], jnp.float32)
+
+
+def rgb_to_ycbcr(rgb) -> jax.Array:
+    ycc = jnp.einsum("...c,dc->...d", rgb, _RGB2YCBCR)
+    return ycc + jnp.array([0.0, 0.5, 0.5])
+
+
+def ycbcr_to_rgb(ycc) -> jax.Array:
+    ycc = ycc - jnp.array([0.0, 0.5, 0.5])
+    inv = jnp.linalg.inv(_RGB2YCBCR)
+    return jnp.clip(jnp.einsum("...c,dc->...d", ycc, inv), 0.0, 1.0)
+
+
+def sharpen_luma(rgb, amount) -> jax.Array:
+    """Independent luminance sharpening in YCbCr (paper §V-B.5)."""
+    ycc = rgb_to_ycbcr(rgb)
+    y = ycc[..., 0]
+    blur = (y + jnp.roll(y, 1, 0) + jnp.roll(y, -1, 0)
+            + jnp.roll(y, 1, 1) + jnp.roll(y, -1, 1)) / 5.0
+    y2 = jnp.clip(y + amount * (y - blur), 0.0, 1.0)
+    ycc = ycc.at[..., 0].set(y2)
+    return ycbcr_to_rgb(ycc)

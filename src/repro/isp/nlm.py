@@ -1,0 +1,46 @@
+"""Non-Local Means denoising, FPGA-adapted (paper §V-B.4, after Koizumi &
+Maruyama 2020).
+
+The FPGA version bounds the search window so everything fits line
+buffers; we keep the same bounded geometry (7x7 search, 3x3 patches) so
+the TPU working set fits VMEM tiles.  Patch distances are computed via
+shifted-image algebra (no gather): for each of the 49 offsets, the
+pointwise squared difference is box-filtered 3x3 — this is exactly the
+"integral of shifted differences" trick hardware implementations use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _box3(x):
+    """3x3 box filter via two separable passes (line-buffer analogue)."""
+    k = jnp.ones((3,), x.dtype)
+    x = x + jnp.roll(x, 1, 0) + jnp.roll(x, -1, 0)
+    x = x + jnp.roll(x, 1, 1) + jnp.roll(x, -1, 1)
+    return x / 9.0
+
+
+def nlm_denoise(img, strength: float = 0.1, search: int = 7,
+                h_param=None):
+    """img: [H, W] or [H, W, C] in [0,1]. strength in [0,1] scales the
+    filtering bandwidth h (the NPU's control hook, paper §VI)."""
+    single = img.ndim == 2
+    if single:
+        img = img[..., None]
+    h = h_param if h_param is not None else (1e-3 + 0.2 * strength)
+    r = search // 2
+    lum = jnp.mean(img, axis=-1)
+
+    weights, accum = [], []
+    for dy in range(-r, r + 1):
+        for dx in range(-r, r + 1):
+            shifted = jnp.roll(img, (dy, dx), axis=(0, 1))
+            d2 = _box3((lum - jnp.roll(lum, (dy, dx), axis=(0, 1))) ** 2)
+            w = jnp.exp(-d2 / (h * h))
+            weights.append(w)
+            accum.append(w[..., None] * shifted)
+    wsum = sum(weights)
+    out = sum(accum) / jnp.maximum(wsum[..., None], 1e-9)
+    return out[..., 0] if single else out

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused multi-step LIF scan (the NPU hot loop).
+
+FPGA insight -> TPU mapping (DESIGN.md §2): the FPGA updates membrane
+potentials in registers as events arrive; the TPU equivalent keeps the
+membrane-potential vector resident in VMEM across all T timesteps, so
+the recurrence costs ONE HBM round-trip per neuron block for the whole
+window instead of T round-trips (the naive lax.scan materialises u to
+HBM every step).
+
+Grid: one program per neuron block. Block shapes: currents [T, BN] in
+VMEM, spikes [T, BN] out; u lives in a VMEM scratch register file.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_N = 1024
+
+
+def _lif_kernel(i_ref, s_ref, u_ref, *, decay: float, v_th: float,
+                v_reset: float, T: int):
+    u_ref[...] = jnp.full_like(u_ref, v_reset)
+
+    def step(t, _):
+        u = decay * (u_ref[...] - v_reset) + v_reset + i_ref[t, :]
+        s = (u >= v_th).astype(u.dtype)
+        u_ref[...] = u * (1.0 - s) + v_reset * s
+        s_ref[t, :] = s
+        return 0
+
+    jax.lax.fori_loop(0, T, step, 0)
+
+
+def lif_scan_pallas(currents, *, tau: float = 2.0, v_th: float = 1.0,
+                    v_reset: float = 0.0, block_n: int = BLOCK_N,
+                    interpret: bool = True):
+    """currents: [T, N] -> spikes [T, N] (forward only; training uses the
+    surrogate-grad jnp path, inference uses this kernel)."""
+    T, N = currents.shape
+    pad = (-N) % block_n
+    if pad:
+        currents = jnp.pad(currents, ((0, 0), (0, pad)))
+    Np = N + pad
+    import math
+    decay = math.exp(-1.0 / tau)
+
+    out = pl.pallas_call(
+        functools.partial(_lif_kernel, decay=decay, v_th=v_th,
+                          v_reset=v_reset, T=T),
+        grid=(Np // block_n,),
+        in_specs=[pl.BlockSpec((T, block_n), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((T, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((T, Np), currents.dtype),
+        scratch_shapes=[pltpu.VMEM((block_n,), jnp.float32)],
+        interpret=interpret,
+    )(currents)
+    return out[:, :N]

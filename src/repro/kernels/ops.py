@@ -1,0 +1,52 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; on TPU set
+REPRO_PALLAS_COMPILE=1 to lower natively via Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.demosaic import demosaic_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.lif_scan import lif_scan_pallas
+from repro.kernels.nlm import nlm_pallas
+from repro.kernels.spike_matmul import spike_matmul_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "v_reset"))
+def lif_scan_op(currents, tau: float = 2.0, v_th: float = 1.0,
+                v_reset: float = 0.0):
+    """currents: [T, ...] -> spikes, kernel-backed. Folds trailing dims."""
+    T = currents.shape[0]
+    flat = currents.reshape(T, -1)
+    out = lif_scan_pallas(flat, tau=tau, v_th=v_th, v_reset=v_reset,
+                          interpret=INTERPRET)
+    return out.reshape(currents.shape)
+
+
+@jax.jit
+def spike_matmul_op(x, w):
+    return spike_matmul_pallas(x, w, interpret=INTERPRET)
+
+
+@jax.jit
+def demosaic_op(raw):
+    return demosaic_pallas(raw, interpret=INTERPRET)
+
+
+@jax.jit
+def nlm_op(img, strength):
+    return nlm_pallas(img, strength, interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention_op(q, k, v, causal: bool = True):
+    return flash_attention_pallas(q, k, v, causal=causal,
+                                  interpret=INTERPRET)

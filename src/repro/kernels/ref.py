@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import lif_scan as _lif_scan_jnp
+from repro.isp.demosaic import demosaic_mhc as _demosaic_jnp
+from repro.isp.nlm import nlm_denoise as _nlm_jnp
+
+
+def lif_scan_ref(currents, *, tau=2.0, v_th=1.0, v_reset=0.0):
+    return _lif_scan_jnp(currents, tau=tau, v_th=v_th, v_reset=v_reset)
+
+
+def spike_matmul_ref(x, w):
+    return jnp.dot(x.astype(jnp.float32),
+                   w.astype(jnp.float32)).astype(w.dtype)
+
+
+def demosaic_ref(raw):
+    return _demosaic_jnp(raw)
+
+
+def nlm_ref(img, strength):
+    return _nlm_jnp(img, strength=strength)
+
+
+def flash_attention_ref(q, k, v, *, causal=True):
+    """q: [BH, Sq, d]; k, v: [BH, Sk, d(v)]."""
+    BH, Sq, d = q.shape
+    Sk = k.shape[1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * d ** -0.5
+    if causal:
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkv->bqv", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant, so importing this module never
+touches jax device state (device count is locked at first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_for(devices: int, model_parallel: int = None):
+    """Elastic mesh: derive the largest (data, model) mesh from whatever
+    device count survives a failure (see distributed/elastic.py)."""
+    model_parallel = model_parallel or min(16, devices)
+    while devices % model_parallel:
+        model_parallel //= 2
+    return jax.make_mesh((devices // model_parallel, model_parallel),
+                         ("data", "model"))

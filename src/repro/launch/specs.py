@@ -1,0 +1,155 @@
+"""ShapeDtypeStruct stand-ins for every model input, with shardings.
+
+The dry-run lowers against these — no device allocation ever happens for
+the full-size configs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import MeshAxes, param_sharding_rules
+from repro.models import transformer as tfm
+from repro.models.attention import KVCache, MLACache
+from repro.models.mamba import MambaCache
+from repro.models.xlstm import MLSTMCache, SLSTMCache
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import TrainState
+
+
+def _sds(shape, dtype, ax: MeshAxes, *spec):
+    sharding = None
+    if ax.mesh is not None:
+        sharding = NamedSharding(ax.mesh, P(*spec))
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# below ~1B params, tensor-parallelism is pure overhead on a 256-chip
+# mesh: replicate the weights and run flat data parallelism over every
+# axis (EXPERIMENTS.md §Perf hillclimb B — xlstm-350m)
+SMALL_MODEL_TP_CUTOFF = int(1e9)
+
+
+def cell_axes(ax: MeshAxes, shape: ShapeConfig,
+              cfg: Optional[ModelConfig] = None) -> MeshAxes:
+    """Batch-1 long-decode cannot shard over dp; idle the dp axes.
+    Small models fold the tp axis into dp when the batch allows."""
+    if ax.mesh is None:
+        return ax
+    if shape.kind == "decode" and shape.global_batch % max(ax.dp_size, 1):
+        return MeshAxes(mesh=ax.mesh, dp=(), tp=ax.tp)
+    if (cfg is not None and ax.tp
+            and cfg.param_count() < SMALL_MODEL_TP_CUTOFF
+            and shape.global_batch % (ax.dp_size * ax.tp_size) == 0):
+        return MeshAxes(mesh=ax.mesh, dp=ax.dp + (ax.tp,), tp=None,
+                        zero=False)
+    return ax
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, ax: MeshAxes
+                ) -> Dict[str, Any]:
+    """Input ShapeDtypeStructs for a train/prefill batch."""
+    B, S = shape.global_batch, shape.seq_len
+    dp = ax.dp_spec
+    if cfg.family == "audio":
+        out = {"embeds": _sds((B, S, cfg.d_model), jnp.bfloat16, ax, dp),
+               "labels": _sds((B, S), jnp.int32, ax, dp),
+               "mask": _sds((B, S), jnp.bool_, ax, dp)}
+        return out
+    if cfg.family == "vlm":
+        Pn = cfg.frontend_embed_tokens
+        return {"tokens": _sds((B, S - Pn), jnp.int32, ax, dp),
+                "patch_embeds": _sds((B, Pn, 1024), jnp.bfloat16, ax, dp),
+                "labels": _sds((B, S - Pn), jnp.int32, ax, dp)}
+    return {"tokens": _sds((B, S), jnp.int32, ax, dp),
+            "labels": _sds((B, S), jnp.int32, ax, dp)}
+
+
+def _block_cache_sharding(cfg: ModelConfig, kind: str, ax: MeshAxes,
+                          stacked: bool):
+    """Cache PartitionSpecs mirroring init_block_cache structure."""
+    dp, tp = ax.dp_spec, ax.tp
+    lead = (None,) if stacked else ()
+
+    def mk(*spec):
+        return P(*(lead + spec))
+
+    if kind == "A":
+        if cfg.mla is not None:
+            return MLACache(c_kv=mk(dp, tp, None), k_rope=mk(dp, tp, None))
+        kv_spec = mk(dp, tp, None, None)
+        return KVCache(k=kv_spec, v=kv_spec)
+    if kind == "M":
+        di_ok = ax.tp_size and ((cfg.ssm.expand * cfg.d_model)
+                                % max(ax.tp_size, 1) == 0)
+        tpd = tp if di_ok else None
+        return MambaCache(h=mk(dp, tpd, None), conv=mk(dp, None, tpd))
+    if kind == "L":
+        di = (cfg.ssm.expand if cfg.ssm else 2) * cfg.d_model
+        H = cfg.num_heads
+        htp = tp if H % max(ax.tp_size, 1) == 0 else None
+        return MLSTMCache(C=mk(dp, htp, None, None), n=mk(dp, htp, None),
+                          m=mk(dp, htp))
+    return SLSTMCache(c=mk(dp, None), n=mk(dp, None), h=mk(dp, None),
+                      m=mk(dp, None))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, ax: MeshAxes):
+    """ShapeDtypeStruct pytree for the decode cache, sharded."""
+    kinds = tfm.layer_kinds(cfg)
+    pfx, U, n_units = tfm.layout(cfg)
+    shapes = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, batch, seq_len))
+
+    def attach(spec_tree, shape_tree):
+        return jax.tree_util.tree_map(
+            lambda spec, sds: (jax.ShapeDtypeStruct(
+                sds.shape, sds.dtype,
+                sharding=NamedSharding(ax.mesh, spec))
+                if ax.mesh is not None else sds),
+            spec_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    out: Dict[str, Any] = {}
+    if pfx:
+        out["prefix"] = {
+            str(i): attach(_block_cache_sharding(cfg, kinds[i][0], ax, False),
+                           shapes["prefix"][str(i)])
+            for i in range(pfx)}
+    if n_units:
+        ukinds = kinds[pfx:pfx + U]
+        out["units"] = {
+            str(i): attach(_block_cache_sharding(cfg, ukinds[i][0], ax, True),
+                           shapes["units"][str(i)])
+            for i in range(U)}
+    return out
+
+
+def param_specs(cfg: ModelConfig, ax: MeshAxes):
+    shapes = jax.eval_shape(
+        lambda: tfm.init_params(jax.random.PRNGKey(0), cfg))
+    shardings = param_sharding_rules(shapes, ax)
+    if ax.mesh is None:
+        return shapes
+    return jax.tree_util.tree_map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                             sharding=sh),
+        shapes, shardings)
+
+
+def train_state_specs(cfg: ModelConfig, opt_cfg: AdamWConfig, ax: MeshAxes):
+    """TrainState SDS tree: params + optimizer moments share shardings."""
+    p = param_specs(cfg, ax)
+
+    def moment(sds):
+        return jax.ShapeDtypeStruct(sds.shape, jnp.dtype(opt_cfg.state_dtype),
+                                    sharding=getattr(sds, "sharding", None))
+    opt = {"m": jax.tree_util.tree_map(moment, p),
+           "v": jax.tree_util.tree_map(moment, p),
+           "count": _sds((), jnp.int32, ax)}
+    return TrainState(params=p, opt=opt, step=_sds((), jnp.int32, ax), ef=())

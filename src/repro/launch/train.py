@@ -1,0 +1,102 @@
+"""Production training launcher.
+
+  python -m repro.launch.train --arch qwen2-7b --steps 100 \
+      --reduced --ckpt-dir /tmp/ckpt [--resume]
+
+Full-size archs on real hardware use the production mesh; in this CPU
+container ``--reduced`` selects the smoke config on the local device.
+SNN archs (spiking_*) route to the paper trainer.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs import registry
+from repro.data.synthetic import make_scene_batch, make_token_batch
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+from repro.distributed.sharding import MeshAxes, from_mesh
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedule import warmup_cosine
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-7b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--remat", default="unit")
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the 16x16 mesh (TPU deployments)")
+    args = ap.parse_args()
+
+    if args.arch in registry.SNN_ARCHS:
+        return train_snn(args)
+
+    mesh = None
+    if args.production_mesh:
+        from repro.launch.mesh import make_production_mesh
+        mesh = make_production_mesh()
+    ax = from_mesh(mesh) if mesh is not None else MeshAxes()
+
+    cfg = registry.reduced(args.arch) if args.reduced \
+        else registry.get_config(args.arch)
+    opt_cfg = AdamWConfig(lr=args.lr)
+    sched = warmup_cosine(args.lr, warmup=10, total=args.steps)
+    rng = jax.random.PRNGKey(0)
+    state = init_train_state(rng, cfg, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, ax, sched,
+                                      remat=args.remat),
+                      donate_argnums=(0,))
+
+    def data_fn(step):
+        return make_token_batch(jax.random.PRNGKey(step), args.batch,
+                                args.seq, cfg.vocab_size)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    trainer = Trainer(step_fn, state, data_fn, ckpt=ckpt,
+                      ckpt_every=args.ckpt_every,
+                      monitor=HeartbeatMonitor(["worker0"]))
+    trainer.run(args.steps)
+    final = trainer.history[-1]
+    print(f"final: step={final['step']} loss={final['loss']:.4f}")
+
+
+def train_snn(args):
+    from repro.configs.registry import reduced_snn
+    from repro.core.npu import init_npu
+    from repro.core.train import init_snn_state, make_snn_train_step
+
+    cfg = reduced_snn(args.arch) if args.reduced \
+        else registry.get_snn_config(args.arch)
+    opt_cfg = AdamWConfig(lr=1e-3, weight_decay=1e-4)
+    rng = jax.random.PRNGKey(0)
+    state = init_snn_state(init_npu(rng, cfg), opt_cfg)
+    step_fn = jax.jit(make_snn_train_step(cfg, opt_cfg))
+
+    def data_fn(step):
+        return make_scene_batch(jax.random.PRNGKey(step), batch=args.batch,
+                                height=cfg.height, width=cfg.width,
+                                time_steps=cfg.time_steps)
+
+    ckpt = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    trainer = Trainer(step_fn, state, data_fn, ckpt=ckpt,
+                      ckpt_every=args.ckpt_every)
+    trainer.run(args.steps)
+    final = trainer.history[-1]
+    print(f"final: step={final['step']} loss={final['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models.transformer import init_params, forward_lm  # noqa: F401

@@ -1,0 +1,495 @@
+"""Attention: GQA with flash-scan softmax, MLA (DeepSeek), flash-decode.
+
+Memory discipline mirrors the paper's FPGA streaming insight mapped to
+TPU: never materialise the S x S score matrix.  Training/prefill use an
+online-softmax scan over KV blocks (a pure-jnp flash attention whose
+Pallas twin lives in ``repro.kernels.flash_attention``); decode against a
+sequence-sharded KV cache uses a partial-softmax + LSE-merge across the
+``model`` axis (flash-decoding on TPU).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes, shard
+from repro.models.blocks import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), dtype=dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), dtype=dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), dtype=dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    return {"attn": p}
+
+
+def init_mla(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m = cfg.mla
+    ks = jax.random.split(rng, 5)
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {"mla": {
+        "wq_a": dense_init(ks[0], (cfg.d_model, m.q_lora_rank), dtype=dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, cfg.num_heads * qk), dtype=dtype),
+        # down-proj to compressed kv latent + decoupled rope key
+        "wkv_a": dense_init(ks[2], (cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim), dtype=dtype),
+        # up-proj latent -> per-head nope-k and v
+        "wkv_b": dense_init(ks[3], (m.kv_lora_rank,
+                                    cfg.num_heads * (m.qk_nope_head_dim + m.v_head_dim)), dtype=dtype),
+        "wo": dense_init(ks[4], (cfg.num_heads * m.v_head_dim, cfg.d_model), dtype=dtype),
+    }}
+
+
+# ---------------------------------------------------------------------------
+# Flash-scan attention core (no S x S materialisation)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q, k, v, *, causal: bool, q_offset, window: int = 0,
+                    block: int = 512, unroll: bool = False,
+                    shard_heads=None):
+    """Online-softmax attention, scanning KV blocks.
+
+    q: [B, Sq, Hq, hd]; k,v: [B, Sk, Hkv, hd]. ``q_offset``: absolute
+    position of q[0] minus absolute position of k[0] (train/prefill: 0).
+    Returns [B, Sq, Hq, hd].
+
+    GQA is handled by an explicit KV head repeat rather than a (Hkv, G)
+    reshape of q: the reshape splits the TP-sharded head dim and forces
+    the partitioner to all-gather q in fp32 (~1 GB per use at 7B/4k —
+    EXPERIMENTS.md §Perf hillclimb A).  Repeating the small replicated
+    KV across Hq is an SPMD-local broadcast; every einsum stays
+    head-shard-local.
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    hdv = v.shape[-1]           # MLA: value head dim may differ from qk
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+        if shard_heads is not None:
+            k = shard_heads(k)
+            v = shard_heads(v)
+    qg = q.astype(jnp.float32)
+    scale = hd ** -0.5
+
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, Hq, hd)
+    vb = v.reshape(B, nblk, block, Hq, hdv)
+
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, bidx = inp
+        k_pos = bidx * block + jnp.arange(block)
+        s = jnp.einsum("bqhd,bkhd->bqhk", qg, kblk.astype(jnp.float32)) * scale
+        if not causal:
+            mask = k_pos[None, :] < Sk  # only mask padding
+        else:
+            mask = k_pos[None, :] <= q_pos[:, None]
+            mask &= k_pos[None, :] < Sk
+        if window:
+            mask &= k_pos[None, :] > (q_pos[:, None] - window)
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Sq, Hq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hq), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hq, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), jnp.arange(nblk)),
+        unroll=nblk if unroll else 1)
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, Hq, hdv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _flash_shard_map(q, k, v, cfg: ModelConfig, ax: MeshAxes, window: int):
+    """Head-local flash attention under shard_map.
+
+    The auto-partitioner repeatedly picked gather-happy layouts for the
+    GQA einsums (fp32 all-gathers of q or repeated KV, ~1 GB per use —
+    EXPERIMENTS.md §Perf hillclimb A); running the whole attention body
+    manually makes it collective-free: q is head-sharded, the small KV
+    arrives replicated, and each shard takes the KV rows its q heads
+    map to.  Requires Hq % tp == 0 (callers fall back otherwise).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    Hq = q.shape[2]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    tp = ax.tp
+    tp_size = ax.tp_size
+    Hq_l = Hq // tp_size
+    kv_sharded = Hkv % tp_size == 0
+
+    def local(q, k, v):
+        if kv_sharded:
+            # local KV heads correspond 1:1 with local q head groups
+            k_loc = jnp.repeat(k, G, axis=2) if G > 1 else k
+            v_loc = jnp.repeat(v, G, axis=2) if G > 1 else v
+        else:
+            base = jax.lax.axis_index(tp) * Hq_l if tp else 0
+            ids = base + jnp.arange(Hq_l)
+            k_loc = jnp.take(k, ids // G, axis=2)  # fused repeat+slice
+            v_loc = jnp.take(v, ids // G, axis=2)
+        return flash_attention(q, k_loc, v_loc, causal=cfg.causal,
+                               q_offset=0, window=window,
+                               unroll=cfg.unroll_scans)
+
+    dp = ax.dp_spec
+    kv_spec = P(dp, None, tp, None) if kv_sharded else P(dp)
+    return shard_map(
+        local, mesh=ax.mesh,
+        in_specs=(P(dp, None, tp, None), kv_spec, kv_spec),
+        out_specs=P(dp, None, tp, None),
+        check_rep=False,
+    )(q, k, v)
+
+
+def apply_attention(p, x, positions, cfg: ModelConfig, ax: MeshAxes,
+                    *, window: Optional[int] = None, return_kv: bool = False):
+    """x: [B, S, D]; positions: [S]. Returns [B, S, D] (+ (k, v))."""
+    a = p["attn"]
+    B, S, D = x.shape
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+
+    q = x @ a["wq"]
+    k = x @ a["wk"]
+    v = x @ a["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + a["bq"], k + a["bk"], v + a["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = shard(q, ax, ax.dp_spec, None, ax.tp, None)
+    k = shard(k, ax, ax.dp_spec, None, ax.tp if Hkv % max(ax.tp_size, 1) == 0 else None, None)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    w = (window if window is not None else cfg.attention_window) or 0
+    if ax.mesh is not None and ax.tp and Hq % ax.tp_size == 0:
+        # manual head-local path (KV head-sharded when divisible,
+        # otherwise replicated + per-shard slice)
+        out = _flash_shard_map(q, k, v, cfg, ax, w)
+    else:
+        out = flash_attention(
+            q, k, v, causal=cfg.causal, q_offset=0, window=w,
+            unroll=cfg.unroll_scans,
+            shard_heads=lambda t: shard(t, ax, ax.dp_spec, None, ax.tp,
+                                        None))
+    out = out.reshape(B, S, Hq * hd)
+    out = out @ a["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA forward (train / prefill) — non-absorbed form
+# ---------------------------------------------------------------------------
+
+def apply_mla(p, x, positions, cfg: ModelConfig, ax: MeshAxes,
+              *, return_kv: bool = False):
+    m = cfg.mla
+    w = p["mla"]
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    q = (x @ w["wq_a"]) @ w["wq_b"]
+    q = q.reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ w["wkv_a"]                      # [B,S, c_kv + dr]
+    c_kv, k_rope = kv_a[..., :m.kv_lora_rank], kv_a[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,dr]
+
+    kv = c_kv @ w["wkv_b"]
+    kv = kv.reshape(B, S, H, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, dr))], axis=-1)
+    q_full = shard(q_full, ax, ax.dp_spec, None, ax.tp, None)
+    k_full = shard(k_full, ax, ax.dp_spec, None, ax.tp, None)
+    v = shard(v, ax, ax.dp_spec, None, ax.tp, None)
+
+    if ax.mesh is not None and ax.tp and H % ax.tp_size == 0:
+        # fully head-local: MLA K/V are per-head projections of the
+        # latent, already TP-sharded — no collectives inside attention
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        dp = ax.dp_spec
+        hs = P(dp, None, ax.tp, None)
+        out = shard_map(
+            lambda q, k, v: flash_attention(q, k, v, causal=cfg.causal,
+                                            q_offset=0,
+                                            unroll=cfg.unroll_scans),
+            mesh=ax.mesh, in_specs=(hs, hs, hs), out_specs=hs,
+            check_rep=False)(q_full, k_full, v)
+    else:
+        out = flash_attention(
+            q_full, k_full, v, causal=cfg.causal, q_offset=0,
+            unroll=cfg.unroll_scans,
+            shard_heads=lambda t: shard(t, ax, ax.dp_spec, None, ax.tp,
+                                        None))
+    out = out.reshape(B, S, H * dv)
+    out = out @ w["wo"]
+    if return_kv:
+        return out, (c_kv, k_rope[:, :, 0, :])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode: sequence-sharded KV cache + LSE merge over the model axis
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    """GQA cache. k/v: [B, S, Hkv, hd], sequence-sharded over tp axis."""
+    k: jax.Array
+    v: jax.Array
+
+
+class MLACache(NamedTuple):
+    """MLA compressed cache. c_kv: [B, S, c], k_rope: [B, S, dr]."""
+    c_kv: jax.Array
+    k_rope: jax.Array
+
+
+def _merge_partial(o, m, l, tp: Optional[str]):
+    """Merge per-shard partial softmax results across the tp axis."""
+    if tp is None:
+        return o / jnp.maximum(l[..., None], 1e-30)
+    M = jax.lax.pmax(m, tp)
+    corr = jnp.exp(m - M)
+    o = jax.lax.psum(o * corr[..., None], tp)
+    l = jax.lax.psum(l * corr, tp)
+    return o / jnp.maximum(l[..., None], 1e-30)
+
+
+def _decode_attn_local(q, k_chunk, v_chunk, chunk_start, cache_len, tp):
+    """q: [B,Hq,hd]; k_chunk/v_chunk: [B,Sc,Hkv,hd] (this shard's chunk).
+
+    Computes partial attention over the local chunk, merges over tp.
+    ``cache_len``: number of valid tokens, scalar or per-batch [B].
+    """
+    B, Sc, Hkv, hd = k_chunk.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_chunk.astype(jnp.float32)) * scale
+    k_pos = chunk_start + jnp.arange(Sc)
+    clen = jnp.broadcast_to(jnp.asarray(cache_len), (B,))
+    valid = k_pos[None, :] < clen[:, None]                   # [B, Sc]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_chunk.astype(jnp.float32))
+    out = _merge_partial(o, m, l, tp)
+    return out.reshape(B, Hq, hd)
+
+
+def decode_attention(p, x, cache: KVCache, pos, cfg: ModelConfig, ax: MeshAxes):
+    """One-token decode. x: [B, 1, D]; pos: scalar position, or per-slot
+    [B] vector (continuous batching; -1 marks an inactive slot).
+
+    Cache is sequence-sharded over the tp axis.  Projections run under
+    plain pjit; the cache update + partial attention run in a shard_map.
+    Returns ([B, 1, D], new_cache).
+    """
+    a = p["attn"]
+    B = x.shape[0]
+    hd = cfg.resolved_head_dim
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+
+    xq = x[:, 0, :]
+    q = (xq @ a["wq"]).reshape(B, Hq, hd)
+    k = (xq @ a["wk"]).reshape(B, Hkv, hd)
+    v = (xq @ a["wv"]).reshape(B, Hkv, hd)
+    if cfg.qkv_bias:
+        q = q + a["bq"].reshape(Hq, hd)
+        k = k + a["bk"].reshape(Hkv, hd)
+        v = v + a["bv"].reshape(Hkv, hd)
+    posv = jnp.asarray(pos)
+    vec = posv.ndim == 1
+    rope_pos = posv[:, None] if vec else posv[None]
+    q = apply_rope(q[:, None], rope_pos, cfg.rope_theta)[:, 0]
+    k = apply_rope(k[:, None], rope_pos, cfg.rope_theta)[:, 0]
+
+    S = cache.k.shape[1]
+
+    def local(q, k_new, v_new, kc, vc, posl):
+        tp = ax.tp if ax.mesh is not None else None
+        Sc = kc.shape[1]
+        shard_idx = jax.lax.axis_index(tp) if tp else jnp.int32(0)
+        chunk_start = shard_idx * Sc
+        # write the new token into whichever shard owns position `pos`
+        rel = posl - chunk_start
+        if vec:
+            sel = (jnp.arange(Sc)[None, :] == rel[:, None])   # [B, Sc]
+            kc = jnp.where(sel[..., None, None], k_new[:, None], kc)
+            vc = jnp.where(sel[..., None, None], v_new[:, None], vc)
+        else:
+            in_range = (rel >= 0) & (rel < Sc)
+            relc = jnp.clip(rel, 0, Sc - 1)
+            kc = jax.lax.cond(
+                in_range,
+                lambda: jax.lax.dynamic_update_slice(
+                    kc, k_new[:, None], (0, relc, 0, 0)),
+                lambda: kc)
+            vc = jax.lax.cond(
+                in_range,
+                lambda: jax.lax.dynamic_update_slice(
+                    vc, v_new[:, None], (0, relc, 0, 0)),
+                lambda: vc)
+        out = _decode_attn_local(q, kc, vc, chunk_start, posl + 1, tp)
+        return out, kc, vc
+
+    if ax.mesh is None:
+        out, kc, vc = local(q, k, v, cache.k, cache.v, posv)
+    else:
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        dp = ax.dp_spec
+        pos_spec = P(dp) if vec else P()
+        out, kc, vc = shard_map(
+            local, mesh=ax.mesh,
+            in_specs=(P(dp), P(dp), P(dp), P(dp, ax.tp), P(dp, ax.tp),
+                      pos_spec),
+            out_specs=(P(dp), P(dp, ax.tp), P(dp, ax.tp)),
+            check_rep=False,
+        )(q, k, v, cache.k, cache.v, posv)
+
+    out = (out.reshape(B, Hq * hd) @ a["wo"])[:, None, :]
+    return out, KVCache(kc, vc)
+
+
+def decode_mla(p, x, cache: MLACache, pos, cfg: ModelConfig, ax: MeshAxes):
+    """MLA decode with the absorbed-weight trick: attention runs directly
+    against the compressed latent cache (c_kv) — the KV cache is
+    ``kv_lora_rank + rope_dim`` per token instead of 2*H*hd."""
+    m = cfg.mla
+    w = p["mla"]
+    B = x.shape[0]
+    H = cfg.num_heads
+    dn, dr, dv, c = (m.qk_nope_head_dim, m.qk_rope_head_dim,
+                     m.v_head_dim, m.kv_lora_rank)
+    posv = jnp.asarray(pos)
+    vec = posv.ndim == 1
+    rope_pos = posv[:, None] if vec else posv[None]
+
+    xq = x[:, 0, :]
+    q = ((xq @ w["wq_a"]) @ w["wq_b"]).reshape(B, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope[:, None], rope_pos, cfg.rope_theta)[:, 0]
+
+    kv_a = xq @ w["wkv_a"]
+    c_new, kr_new = kv_a[..., :c], kv_a[..., c:]
+    kr_new = apply_rope(kr_new[:, None, None], rope_pos,
+                        cfg.rope_theta)[:, 0, 0]
+
+    # absorb: q_lat[b,h,c] = q_nope . wkv_b_k[h, dn, c]
+    wkv_b = w["wkv_b"].reshape(c, H, dn + dv)
+    wk = wkv_b[..., :dn]            # [c, H, dn]
+    wv = wkv_b[..., dn:]            # [c, H, dv]
+    q_lat = jnp.einsum("bhd,chd->bhc", q_nope.astype(jnp.float32),
+                       wk.astype(jnp.float32))
+
+    def local(q_lat, q_rope, c_new, kr_new, cc, krc, posl):
+        tp = ax.tp if ax.mesh is not None else None
+        Bl = cc.shape[0]
+        Sc = cc.shape[1]
+        shard_idx = jax.lax.axis_index(tp) if tp else jnp.int32(0)
+        chunk_start = shard_idx * Sc
+        rel = posl - chunk_start
+        if vec:
+            sel = (jnp.arange(Sc)[None, :] == rel[:, None])
+            cc = jnp.where(sel[..., None], c_new[:, None], cc)
+            krc = jnp.where(sel[..., None], kr_new[:, None], krc)
+        else:
+            in_range = (rel >= 0) & (rel < Sc)
+            relc = jnp.clip(rel, 0, Sc - 1)
+            cc = jax.lax.cond(
+                in_range,
+                lambda: jax.lax.dynamic_update_slice(
+                    cc, c_new[:, None], (0, relc, 0)),
+                lambda: cc)
+            krc = jax.lax.cond(
+                in_range,
+                lambda: jax.lax.dynamic_update_slice(
+                    krc, kr_new[:, None], (0, relc, 0)),
+                lambda: krc)
+        scale = (dn + dr) ** -0.5
+        s = (jnp.einsum("bhc,bkc->bhk", q_lat, cc.astype(jnp.float32)) +
+             jnp.einsum("bhd,bkd->bhk", q_rope.astype(jnp.float32),
+                        krc.astype(jnp.float32))) * scale
+        k_pos = chunk_start + jnp.arange(Sc)
+        clen = jnp.broadcast_to(posl + 1, (Bl,))
+        s = jnp.where(k_pos[None, None, :] < clen[:, None, None],
+                      s, NEG_INF)
+        mx = jnp.max(s, axis=-1)
+        pr = jnp.exp(s - mx[..., None])
+        l = jnp.sum(pr, axis=-1)
+        o = jnp.einsum("bhk,bkc->bhc", pr, cc.astype(jnp.float32))
+        o = _merge_partial(o, mx, l, tp)
+        return o, cc, krc
+
+    if ax.mesh is None:
+        o_lat, cc, krc = local(q_lat, q_rope, c_new, kr_new,
+                               cache.c_kv, cache.k_rope, posv)
+    else:
+        from jax.sharding import PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        dp = ax.dp_spec
+        pos_spec = P(dp) if vec else P()
+        o_lat, cc, krc = shard_map(
+            local, mesh=ax.mesh,
+            in_specs=(P(dp), P(dp), P(dp), P(dp),
+                      P(dp, ax.tp), P(dp, ax.tp), pos_spec),
+            out_specs=(P(dp), P(dp, ax.tp), P(dp, ax.tp)),
+            check_rep=False,
+        )(q_lat, q_rope, c_new, kr_new, cache.c_kv, cache.k_rope, posv)
+
+    # un-absorb values: out[b,h,dv] = o_lat[b,h,c] . wv[c,h,dv]
+    out = jnp.einsum("bhc,chd->bhd", o_lat, wv.astype(jnp.float32))
+    out = out.reshape(B, H * dv).astype(x.dtype) @ w["wo"]
+    return out[:, None, :], MLACache(cc, krc)

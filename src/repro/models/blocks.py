@@ -1,0 +1,89 @@
+"""Shared building blocks: norms, MLP, RoPE, initialisers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes, shard
+
+
+def dense_init(rng, shape, in_axis=0, dtype=jnp.float32):
+    fan_in = shape[in_axis] if in_axis is not None else shape[0]
+    scale = (1.0 / max(fan_in, 1)) ** 0.5
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"norm_scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_kind == "ln":
+        p["norm_bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "ln":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["norm_scale"] + p["norm_bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm_scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # [hd/2]
+    # angles: [..., S, 1, hd/2]
+    ang = positions.astype(jnp.float32)[..., None, None] * inv
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GELU-MLP)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, cfg: ModelConfig, d_ff: Optional[int] = None, dtype=jnp.bfloat16):
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "mlp": {
+            "wi": dense_init(k1, (cfg.d_model, d_ff), dtype=dtype),
+            "wg": dense_init(k2, (cfg.d_model, d_ff), dtype=dtype),
+            "wo": dense_init(k3, (d_ff, cfg.d_model), dtype=dtype),
+        }
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig, ax: MeshAxes):
+    m = p["mlp"]
+    h = act_fn(cfg.act)(x @ m["wg"]) * (x @ m["wi"])
+    h = shard(h, ax, ax.dp_spec, None, ax.tp)
+    return h @ m["wo"]

@@ -1,0 +1,160 @@
+"""LM losses (dense/MoE/VLM/audio + DeepSeek MTP) and serve entrypoints."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes, shard
+from repro.models import transformer as tfm
+from repro.models.blocks import apply_norm
+
+IGNORE = -1
+
+
+def _token_ce(logits, labels2, ax: MeshAxes):
+    """logits: [T, V] token-sharded; labels2: [T] (IGNORE = masked out)."""
+    valid = labels2 != IGNORE
+    safe = jnp.where(valid, labels2, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    ce = jnp.where(valid, lse - picked, 0.0)
+    n = jnp.maximum(jnp.sum(valid), 1)
+    return jnp.sum(ce) / n, n
+
+
+def vocab_parallel_ce(params, cfg: ModelConfig, hidden, labels,
+                      ax: MeshAxes):
+    """Cross-entropy with the vocab dim sharded over tp (Megatron-style).
+
+    Avoids gathering the [V, D] lm_head entirely (2.5 GB fp32 per use at
+    9B scale — EXPERIMENTS.md §Perf hillclimb A): each tp shard computes
+    logits for its vocab slice, the softmax runs via pmax/psum of
+    per-shard statistics, and the label logit is psum'd from its owner
+    shard.  Tokens shard over dp only.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    w = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    B, S, D = hidden.shape
+    V = cfg.vocab_size
+    h2 = hidden.reshape(B * S, D)
+    lab = labels.reshape(B * S)
+    tp, dp = ax.tp, ax.dp_spec
+    V_l = V // ax.tp_size
+
+    def _pmax_const(x):
+        # pmax lacks an autodiff rule; the softmax max-shift carries no
+        # gradient anyway, so treat it as a constant.
+        @jax.custom_vjp
+        def f(x):
+            return jax.lax.pmax(x, tp)
+
+        f.defvjp(lambda x: (jax.lax.pmax(x, tp), None),
+                 lambda _, g: (jnp.zeros_like(g),))
+        return f(x)
+
+    def local(h2, w_l, lab):
+        from repro.models.transformer import _logits_matmul
+        logits = _logits_matmul(h2, w_l)              # [T_l, V_l] fp32
+        v_lo = jax.lax.axis_index(tp) * V_l
+        m = _pmax_const(jnp.max(logits, axis=-1))
+        l = jax.lax.psum(jnp.sum(jnp.exp(logits - m[:, None]), axis=-1),
+                         tp)
+        lse = m + jnp.log(l)
+        valid = lab != IGNORE
+        safe = jnp.where(valid, lab, 0)
+        rel = safe - v_lo
+        mine = (rel >= 0) & (rel < V_l)
+        relc = jnp.clip(rel, 0, V_l - 1)
+        pick_l = jnp.take_along_axis(logits, relc[:, None], axis=-1)[:, 0]
+        picked = jax.lax.psum(jnp.where(mine, pick_l, 0.0), tp)
+        ce = jnp.where(valid, lse - picked, 0.0)
+        s = jax.lax.psum(jnp.sum(ce), ax.dp) if ax.dp else jnp.sum(ce)
+        n = jax.lax.psum(jnp.sum(valid), ax.dp) if ax.dp \
+            else jnp.sum(valid)
+        return s / jnp.maximum(n, 1)
+
+    return shard_map(
+        local, mesh=ax.mesh,
+        in_specs=(P(dp, None), P(tp, None), P(dp)),
+        out_specs=P(),
+        check_rep=False,
+    )(h2, w, lab)
+
+
+def token_ce(params, cfg: ModelConfig, hidden, labels, ax: MeshAxes):
+    """Dispatch: vocab-parallel CE when the mesh + vocab allow it,
+    token-sharded logits otherwise."""
+    if (ax.mesh is not None and ax.tp
+            and cfg.vocab_size % ax.tp_size == 0):
+        return vocab_parallel_ce(params, cfg, hidden, labels, ax)
+    logits = tfm.lm_logits(params, cfg, hidden, ax)
+    labels2 = labels.reshape(-1)
+    tok_axes = tuple(ax.dp + ((ax.tp,) if ax.tp else ()))
+    labels2 = shard(labels2, ax, tok_axes if tok_axes else None)
+    loss, _ = _token_ce(logits, labels2, ax)
+    return loss
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, Any], ax: MeshAxes,
+            remat: str = "unit") -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    hidden, aux = tfm.forward_lm(params, cfg, batch, ax, remat=remat)
+    B, S, D = hidden.shape
+
+    labels = batch["labels"]
+    if cfg.family == "vlm" and labels.shape[1] != S:
+        # prepend IGNORE for the patch-prefix positions
+        P = S - labels.shape[1]
+        labels = jnp.concatenate(
+            [jnp.full((B, P), IGNORE, labels.dtype), labels], axis=1)
+    if cfg.family == "audio" and "mask" in batch:
+        labels = jnp.where(batch["mask"], labels, IGNORE)
+
+    loss = token_ce(params, cfg, hidden, labels, ax)
+
+    metrics = {"ce": loss, "aux": aux}
+    total = loss + aux
+
+    if cfg.mtp_depth:
+        mtp_loss = _mtp_loss(params, cfg, batch, hidden, ax)
+        metrics["mtp"] = mtp_loss
+        total = total + 0.3 * mtp_loss
+    return total, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, batch, hidden, ax: MeshAxes):
+    """DeepSeek multi-token prediction (depth 1): combine h_i with
+    emb(t_{i+1}) through one extra block to predict t_{i+2}."""
+    mtp = params["mtp"]
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    B, S, D = hidden.shape
+    h = apply_norm(mtp["norm_h"], hidden[:, :-1], cfg)
+    e = params["tok_embed"][tokens[:, 1:]]
+    e = apply_norm(mtp["norm_e"], e, cfg)
+    x = jnp.concatenate([h, e], axis=-1) @ mtp["proj"]
+    x = shard(x, ax, ax.dp_spec, None, None)
+    positions = jnp.arange(S - 1)
+    kinds = tfm.layer_kinds(cfg)
+    x, _ = tfm.apply_block(mtp["block"], x, positions, cfg, ax,
+                           "A", kinds[-1][1])
+    x = apply_norm(mtp["final"], x, cfg)
+    # position i (of S-1) predicts t_{i+2} = labels[i+1]
+    return token_ce(params, cfg, x, labels[:, 1:], ax)
+
+
+# ---------------------------------------------------------------------------
+# Serving entrypoints (lowered by the dry-run for decode/prefill cells)
+# ---------------------------------------------------------------------------
+
+def serve_decode(params, cfg: ModelConfig, cache, tokens, pos, ax: MeshAxes):
+    """One decode step against an existing KV cache."""
+    return tfm.forward_decode(params, cfg, tokens, cache, pos, ax)
+
+
+def serve_prefill(params, cfg: ModelConfig, batch, ax: MeshAxes,
+                  cache_len=None):
+    return tfm.forward_prefill(params, cfg, batch, ax, cache_len=cache_len)

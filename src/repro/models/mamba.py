@@ -1,0 +1,179 @@
+"""Mamba (S6 selective scan) block — chunkwise-parallel, TP over d_inner.
+
+The FPGA->TPU adaptation note from DESIGN.md applies here: the recurrent
+state stays resident in fast memory across a chunk (associative scan in
+VMEM/registers), with HBM traffic only at chunk boundaries — the same
+residency trick as the paper's LIF membrane potential.
+
+Memory: the naive associative scan over the full sequence materialises
+[B, S, d_inner, d_state] (tens of GB at 4k x 8192 x 16).  We scan over
+chunks with ``jax.checkpoint`` on the chunk body, so peak memory is one
+chunk's working set + per-chunk boundary states.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.distributed.sharding import MeshAxes, shard
+from repro.models.blocks import dense_init
+
+CHUNK = 256
+
+
+class MambaCache(NamedTuple):
+    """Decode-time recurrent state."""
+    h: jax.Array         # [B, d_inner, d_state]
+    conv: jax.Array      # [B, d_conv - 1, d_inner]
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    s = cfg.ssm or SSMConfig()
+    di = s.expand * cfg.d_model
+    dtr = s.dt_rank or -(-cfg.d_model // 16)
+    return di, s.d_state, s.d_conv, dtr
+
+
+def init_mamba(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    di, ds, dc, dtr = _dims(cfg)
+    ks = jax.random.split(rng, 6)
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {"mamba": {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (dc, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * ds), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, cfg.d_model), dtype=dtype),
+    }}
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig):
+    """Shared pre-scan math. x: [B, S, di] (post-conv, post-silu).
+
+    Returns dA [B,S,di,ds] decay, dBx [B,S,di,ds] input, C [B,S,ds].
+    """
+    di, ds, dc, dtr = _dims(cfg)
+    proj = x @ p["x_proj"]
+    dt_low, B_ssm, C_ssm = jnp.split(proj.astype(jnp.float32),
+                                     [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"])                       # [B,S,di]
+    A = -jnp.exp(p["A_log"])                                   # [di,ds]
+    dA = jnp.exp(dt[..., None] * A)                            # [B,S,di,ds]
+    dBx = (dt * x.astype(jnp.float32))[..., None] * B_ssm[..., None, :]
+    return dA, dBx, C_ssm
+
+
+def _chunk_scan(h0, dA, dBx, C):
+    """One chunk. h0: [B,di,ds]; dA,dBx: [B,L,di,ds]; C: [B,L,ds].
+
+    Returns (y [B,L,di], h_end [B,di,ds]).
+    """
+    def combine(a, b):
+        a1, bx1 = a
+        a2, bx2 = b
+        return a1 * a2, bx1 * a2 + bx2
+
+    Acum, Bx = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    h = Acum * h0[:, None] + Bx                                # [B,L,di,ds]
+    y = jnp.einsum("blds,bls->bld", h, C)
+    return y, h[:, -1]
+
+
+def apply_mamba(p, x, cfg: ModelConfig, ax: MeshAxes,
+                *, return_state: bool = False):
+    """Full-sequence forward. x: [B, S, D] -> [B, S, D] (+ MambaCache)."""
+    m = p["mamba"]
+    B, S, D = x.shape
+    di, ds, dc, dtr = _dims(cfg)
+
+    xz = x @ m["in_proj"]
+    xz = shard(xz, ax, ax.dp_spec, None, ax.tp)
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    # causal depthwise conv over S
+    xpad = jnp.pad(xi, ((0, 0), (dc - 1, 0), (0, 0)))
+    xc = sum(xpad[:, k:k + S] * m["conv_w"][k] for k in range(dc))
+    xc = jax.nn.silu(xc + m["conv_b"])
+
+    nchunk = -(-S // CHUNK)
+    pad = nchunk * CHUNK - S
+    if pad:
+        xc = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    dA, dBx, C = _ssm_inputs(m, xc, cfg)
+    if pad:
+        # padded tail must be identity for the recurrence
+        valid = (jnp.arange(nchunk * CHUNK) < S)[None, :, None, None]
+        dA = jnp.where(valid, dA, 1.0)
+        dBx = jnp.where(valid, dBx, 0.0)
+    dA = dA.reshape(B, nchunk, CHUNK, di, ds)
+    dBx = dBx.reshape(B, nchunk, CHUNK, di, ds)
+    C = C.reshape(B, nchunk, CHUNK, ds)
+
+    @jax.checkpoint
+    def step(h, inp):
+        a, bx, c = inp
+        y, h2 = _chunk_scan(h, a, bx, c)
+        return h2, y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_end, ys = jax.lax.scan(step, h0, (jnp.moveaxis(dA, 1, 0),
+                                        jnp.moveaxis(dBx, 1, 0),
+                                        jnp.moveaxis(C, 1, 0)),
+                             unroll=nchunk if cfg.unroll_scans else 1)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nchunk * CHUNK, di)[:, :S]
+    y = y + xc[:, :S] * m["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, ax, ax.dp_spec, None, ax.tp)
+    out = y @ m["out_proj"]
+    if return_state:
+        conv_tail = xi[:, S - (dc - 1):, :] if S >= dc - 1 else jnp.pad(
+            xi, ((0, 0), (dc - 1 - S, 0), (0, 0)))
+        return out, MambaCache(h=h_end, conv=conv_tail)
+    return out
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, ds, dc, _ = _dims(cfg)
+    return MambaCache(
+        h=jnp.zeros((batch, di, ds), jnp.float32),
+        conv=jnp.zeros((batch, dc - 1, di), dtype),
+    )
+
+
+def decode_mamba(p, x, cache: MambaCache, cfg: ModelConfig, ax: MeshAxes,
+                 pos=None):
+    """One-token decode. x: [B, 1, D]. O(1) state update — this is why
+    the hybrid archs run the 500k-context cell.  ``pos`` may be a [B]
+    vector; slots with pos < 0 are inactive and keep their state."""
+    m = p["mamba"]
+    B = x.shape[0]
+    di, ds, dc, dtr = _dims(cfg)
+
+    xz = x[:, 0] @ m["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+
+    conv_in = jnp.concatenate([cache.conv, xi[:, None]], axis=1)  # [B,dc,di]
+    xc = jnp.einsum("bkd,kd->bd", conv_in, m["conv_w"])
+    xc = jax.nn.silu(xc + m["conv_b"])
+
+    dA, dBx, C = _ssm_inputs(m, xc[:, None], cfg)
+    h = cache.h * dA[:, 0] + dBx[:, 0]
+    y = jnp.einsum("bds,bs->bd", h, C[:, 0])
+    y = y + xc * m["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = (y @ m["out_proj"])[:, None]
+    new = MambaCache(h=h, conv=conv_in[:, 1:])
+    if pos is not None and jnp.asarray(pos).ndim == 1:
+        act = (jnp.asarray(pos) >= 0)
+        new = MambaCache(
+            h=jnp.where(act[:, None, None], new.h, cache.h),
+            conv=jnp.where(act[:, None, None], new.conv, cache.conv))
+    return out, new

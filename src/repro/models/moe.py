@@ -1,0 +1,201 @@
+"""Mixture-of-Experts with expert parallelism over the ``model`` axis.
+
+Design (see DESIGN.md §5): activations are data-sharded and *replicated*
+over the tensor/expert axis, so no all-to-all is needed — each shard
+selects the (token, expert) pairs routed to its local experts, runs a
+capacity-bucketed batched matmul (GShard-style dispatch done *after* an
+argsort, so no [T, E, C] one-hot is ever built), scatters results back
+into the local token buffer and psums over the expert axis.  The
+collective cost therefore equals one dense tensor-parallel FFN
+all-reduce.  Expert weights are additionally ZeRO-sharded over the data
+axes and gathered per layer (FSDP semantics supplied by the partitioner
+via their PartitionSpec).
+
+Supports: top-k routing with aux load-balance loss, DeepSeek shared
+experts, Arctic dense-residual FFN, static capacity with token dropping.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes, shard
+from repro.models.blocks import act_fn, dense_init
+
+
+def init_moe(rng, cfg: ModelConfig, dtype=jnp.bfloat16):
+    m = cfg.moe
+    ks = jax.random.split(rng, 8)
+    E, D, F = m.num_experts, cfg.d_model, m.d_expert
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "wi": dense_init(ks[1], (E, D, F), in_axis=1, dtype=dtype),
+        "wg": dense_init(ks[2], (E, D, F), in_axis=1, dtype=dtype),
+        "wo": dense_init(ks[3], (E, F, D), in_axis=1, dtype=dtype),
+    }
+    if m.num_shared_experts:
+        Fs = m.d_expert * m.num_shared_experts
+        p["shared_wi"] = dense_init(ks[4], (D, Fs), dtype=dtype)
+        p["shared_wg"] = dense_init(ks[5], (D, Fs), dtype=dtype)
+        p["shared_wo"] = dense_init(ks[6], (Fs, D), dtype=dtype)
+    if m.dense_residual:
+        kd = jax.random.split(ks[7], 3)
+        p["dense_wi"] = dense_init(kd[0], (D, cfg.d_ff), dtype=dtype)
+        p["dense_wg"] = dense_init(kd[1], (D, cfg.d_ff), dtype=dtype)
+        p["dense_wo"] = dense_init(kd[2], (cfg.d_ff, D), dtype=dtype)
+    return {"moe": p}
+
+
+def _dispatch_local(x2d, top_idx, top_w, e_lo, e_hi, cap_e, E_loc):
+    """Select token->local-expert pairs and build [E_loc, cap_e, D] buckets.
+
+    x2d: [T, D] local tokens; top_idx/top_w: [T, K] global expert routing.
+    Only per-slot index/weight arrays of size E_loc*cap_e are built —
+    no [T*K, D] intermediate is ever materialised (the slot->token gather
+    touches exactly the bucket capacity).
+    Returns (xe [E_loc, cap_e, D], (slot_token, slot_w, slot_valid)).
+    """
+    T, D = x2d.shape
+    K = top_idx.shape[1]
+    flat_e = top_idx.reshape(-1)                    # [T*K]
+    flat_t = (jnp.arange(T * K, dtype=jnp.int32) // K)
+    flat_w = top_w.reshape(-1)
+
+    is_local = (flat_e >= e_lo) & (flat_e < e_hi)
+    local_e = jnp.where(is_local, flat_e - e_lo, E_loc)  # sentinel sorts last
+
+    order = jnp.argsort(local_e, stable=True)
+    se = local_e[order]
+    st = flat_t[order]
+    sw = flat_w[order]
+
+    # position of each pair within its expert group (group starts via
+    # per-expert counts; counts computed by scatter-add, not one-hot)
+    counts = jnp.zeros((E_loc + 1,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts[:-1], dtype=jnp.int32)])
+    pos_in_group = jnp.arange(T * K, dtype=jnp.int32) - starts[se]
+
+    keep = (se < E_loc) & (pos_in_group < cap_e)
+    nslots = E_loc * cap_e
+    slot = jnp.where(keep, se * cap_e + pos_in_group, nslots)  # trash slot
+
+    slot_token = jnp.zeros((nslots + 1,), jnp.int32).at[slot].set(st)[:-1]
+    slot_w = jnp.zeros((nslots + 1,), jnp.float32).at[slot].set(sw)[:-1]
+    slot_valid = jnp.zeros((nslots + 1,), jnp.bool_).at[slot].set(True)[:-1]
+
+    xe = x2d[slot_token] * slot_valid[:, None].astype(x2d.dtype)
+    xe = xe.reshape(E_loc, cap_e, D)
+    return xe, (slot_token, slot_w, slot_valid)
+
+
+def _combine_local(ye, info, T, D):
+    slot_token, slot_w, slot_valid = info
+    yflat = ye.reshape(-1, D).astype(jnp.float32)
+    w = (slot_w * slot_valid).astype(jnp.float32)[:, None]
+    out = jnp.zeros((T, D), jnp.float32)
+    out = out.at[slot_token].add(yflat * w)
+    return out
+
+
+def _moe_local(x2d, p, cfg: ModelConfig, tp: Optional[str], tp_size: int,
+               dp_axes: Tuple[str, ...] = ()):
+    """Per-shard MoE body. x2d: [T_local, D] (replicated over tp).
+
+    Expert weights arrive already gathered over dp (full D/F dims) but
+    sliced to E_loc local experts on the leading dim.
+    Returns (out [T_local, D] — needs no further psum — , aux_loss scalar).
+    """
+    m = cfg.moe
+    E = m.num_experts
+    T, D = x2d.shape
+    E_loc = p["wi"].shape[0]
+    shard_idx = jax.lax.axis_index(tp) if tp else jnp.int32(0)
+    e_lo = shard_idx * E_loc
+    e_hi = e_lo + E_loc
+
+    logits = x2d.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, m.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, axis=-1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (identical on every tp shard; pmean over dp)
+    me = jnp.mean(probs, axis=0)
+    assign = jnp.zeros((E,), jnp.float32).at[top_idx.reshape(-1)].add(1.0)
+    ce = assign / (T * m.top_k)
+    aux = E * jnp.sum(me * ce) * m.router_aux_weight
+    if dp_axes:
+        aux = jax.lax.pmean(aux, dp_axes)
+
+    cap_e = int(max(8, -(-T * m.top_k // E) * m.capacity_factor))
+    xe, info = _dispatch_local(x2d, top_idx, top_w,
+                               e_lo, e_hi, cap_e, E_loc)
+
+    h = act_fn(cfg.act)(jnp.einsum("ecd,edf->ecf", xe, p["wg"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["wi"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    out = _combine_local(ye, info, T, D)
+
+    # shared experts / dense residual: tensor-parallel over tp on the F dim
+    if m.num_shared_experts:
+        hs = act_fn(cfg.act)(x2d @ p["shared_wg"]) * (x2d @ p["shared_wi"])
+        out = out + (hs @ p["shared_wo"]).astype(jnp.float32)
+    if m.dense_residual:
+        hd = act_fn(cfg.act)(x2d @ p["dense_wg"]) * (x2d @ p["dense_wi"])
+        out = out + (hd @ p["dense_wo"]).astype(jnp.float32)
+
+    if tp is not None:
+        out = jax.lax.psum(out, tp)
+        # aux is replicated; don't psum it
+    return out.astype(x2d.dtype), aux
+
+
+def apply_moe(p, x, cfg: ModelConfig, ax: MeshAxes) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    m = p["moe"]
+    B, S, D = x.shape
+    x2d = x.reshape(B * S, D)
+
+    if ax.mesh is None:
+        out, aux = _moe_local(x2d, m, cfg, None, 1)
+        return out.reshape(B, S, D), aux
+
+    dp = ax.dp_spec
+    tp = ax.tp
+    tp_size = ax.tp_size
+
+    def body(x2d, router, wi, wg, wo, *extra):
+        pl = {"router": router, "wi": wi, "wg": wg, "wo": wo}
+        names = []
+        if cfg.moe.num_shared_experts:
+            names += ["shared_wi", "shared_wg", "shared_wo"]
+        if cfg.moe.dense_residual:
+            names += ["dense_wi", "dense_wg", "dense_wo"]
+        pl.update(dict(zip(names, extra)))
+        out, aux = _moe_local(x2d, pl, cfg, tp, tp_size, ax.dp)
+        return out, aux
+
+    from jax.experimental.shard_map import shard_map
+
+    extra_in, extra_vals = [], []
+    if cfg.moe.num_shared_experts:
+        # shared experts: plain TP over the hidden dim
+        extra_in += [P(None, tp), P(None, tp), P(tp, None)]
+        extra_vals += [m["shared_wi"], m["shared_wg"], m["shared_wo"]]
+    if cfg.moe.dense_residual:
+        extra_in += [P(None, tp), P(None, tp), P(tp, None)]
+        extra_vals += [m["dense_wi"], m["dense_wg"], m["dense_wo"]]
+
+    out, aux = shard_map(
+        body, mesh=ax.mesh,
+        in_specs=(P(dp, None), P(None, None),
+                  P(tp, None, None), P(tp, None, None), P(tp, None, None),
+                  *extra_in),
+        out_specs=(P(dp, None), P()),
+        check_rep=False,
+    )(x2d, m["router"], m["wi"], m["wg"], m["wo"], *extra_vals)
+    return out.reshape(B, S, D), aux

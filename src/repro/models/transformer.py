@@ -1,0 +1,472 @@
+"""Generic LM builder: turns a ModelConfig into params + forward fns.
+
+Layers are grouped into a (prefix, repeated-unit) layout so the
+distributed train/serve step compiles a single ``lax.scan`` over stacked
+unit params regardless of depth (61-layer DeepSeek lowers the same HLO
+size as a 2-layer toy).  Hybrid patterns (Jamba "MMMMAMMM", xLSTM 7:1)
+become the repeating unit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes, shard
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import KVCache, MLACache
+from repro.models.blocks import (apply_mlp, apply_norm, dense_init, init_mlp,
+                                 init_norm)
+from repro.models.mamba import MambaCache
+from repro.models.moe import apply_moe, init_moe
+from repro.models.xlstm import MLSTMCache, SLSTMCache
+
+REMAT_POLICIES = {
+    "none": None,
+    "unit": "full",                                   # remat whole unit
+    "dots": "dots_saveable",
+    "nothing": "nothing_saveable",
+}
+
+
+# ---------------------------------------------------------------------------
+# Layout
+# ---------------------------------------------------------------------------
+
+def layer_kinds(cfg: ModelConfig) -> List[Tuple[str, bool]]:
+    return [(cfg.pattern_at(l), cfg.is_moe_layer(l))
+            for l in range(cfg.num_layers)]
+
+
+@functools.lru_cache(maxsize=None)
+def layout(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """-> (prefix_len, unit_len, n_units)."""
+    kinds = layer_kinds(cfg)
+    L = cfg.num_layers
+    for p in range(0, min(L, 9)):
+        rest = kinds[p:]
+        n = len(rest)
+        if n == 0:
+            return p, 0, 0
+        for U in range(1, min(n, 17)):
+            if n % U:
+                continue
+            if all(rest[i] == rest[i % U] for i in range(n)):
+                return p, U, n // U
+    return L, 0, 0   # fully unrolled fallback
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply
+# ---------------------------------------------------------------------------
+
+def _init_mixer(rng, cfg: ModelConfig, kind: str, dtype):
+    if kind == "A":
+        if cfg.mla is not None:
+            return attn_mod.init_mla(rng, cfg, dtype)
+        return attn_mod.init_attention(rng, cfg, dtype)
+    if kind == "M":
+        return mamba_mod.init_mamba(rng, cfg, dtype)
+    if kind == "L":
+        return xlstm_mod.init_mlstm(rng, cfg, dtype)
+    if kind == "S":
+        return xlstm_mod.init_slstm(rng, cfg, dtype)
+    raise ValueError(kind)
+
+
+def init_block(rng, cfg: ModelConfig, kind: str, is_moe: bool,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(rng)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg)}
+    p["mixer"] = _init_mixer(k1, cfg, kind, dtype)
+    if is_moe:
+        p["ln2"] = init_norm(cfg)
+        p["ffn"] = init_moe(k2, cfg, dtype)
+    elif cfg.d_ff:
+        p["ln2"] = init_norm(cfg)
+        p["ffn"] = init_mlp(k2, cfg, dtype=dtype)
+    return p
+
+
+def apply_block(p, x, positions, cfg: ModelConfig, ax: MeshAxes,
+                kind: str, is_moe: bool):
+    """Full-sequence block. Returns (x, aux_loss)."""
+    h = apply_norm(p["ln1"], x, cfg)
+    if kind == "A":
+        if cfg.mla is not None:
+            mix = attn_mod.apply_mla(p["mixer"], h, positions, cfg, ax)
+        else:
+            mix = attn_mod.apply_attention(p["mixer"], h, positions, cfg, ax)
+    elif kind == "M":
+        mix = mamba_mod.apply_mamba(p["mixer"], h, cfg, ax)
+    elif kind == "L":
+        mix = xlstm_mod.apply_mlstm(p["mixer"], h, cfg, ax)
+    else:
+        mix = xlstm_mod.apply_slstm(p["mixer"], h, cfg, ax)
+    x = x + mix.astype(x.dtype)
+    x = shard(x, ax, ax.dp_spec, None, None)
+    # named save point: with remat='save_mixer' the post-psum mixer
+    # output is kept, so the backward pass re-runs neither the mixer
+    # compute nor its TP all-reduce (EXPERIMENTS.md §Perf hillclimb A)
+    x = checkpoint_name(x, "mixer_out")
+
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        if is_moe:
+            out, aux = apply_moe(p["ffn"], h, cfg, ax)
+        else:
+            out = apply_mlp(p["ffn"], h, cfg, ax)
+        x = x + out.astype(x.dtype)
+        x = shard(x, ax, ax.dp_spec, None, None)
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode block (one token, cache-carrying)
+# ---------------------------------------------------------------------------
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                     dtype=jnp.bfloat16):
+    if kind == "A":
+        if cfg.mla is not None:
+            m = cfg.mla
+            return MLACache(
+                c_kv=jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+                k_rope=jnp.zeros((batch, seq_len, m.qk_rope_head_dim), dtype))
+        hd = cfg.resolved_head_dim
+        return KVCache(
+            k=jnp.zeros((batch, seq_len, cfg.num_kv_heads, hd), dtype),
+            v=jnp.zeros((batch, seq_len, cfg.num_kv_heads, hd), dtype))
+    if kind == "M":
+        return mamba_mod.init_mamba_cache(cfg, batch, dtype)
+    if kind == "L":
+        return xlstm_mod.init_mlstm_cache(cfg, batch)
+    return xlstm_mod.init_slstm_cache(cfg, batch)
+
+
+def apply_block_decode(p, x, cache, pos, cfg: ModelConfig, ax: MeshAxes,
+                       kind: str, is_moe: bool):
+    h = apply_norm(p["ln1"], x, cfg)
+    if kind == "A":
+        if cfg.mla is not None:
+            mix, cache = attn_mod.decode_mla(p["mixer"], h, cache, pos, cfg, ax)
+        else:
+            mix, cache = attn_mod.decode_attention(p["mixer"], h, cache, pos,
+                                                   cfg, ax)
+    elif kind == "M":
+        mix, cache = mamba_mod.decode_mamba(p["mixer"], h, cache, cfg, ax,
+                                            pos=pos)
+    elif kind == "L":
+        mix, cache = xlstm_mod.decode_mlstm(p["mixer"], h, cache, cfg, ax,
+                                            pos=pos)
+    else:
+        mix, cache = xlstm_mod.decode_slstm(p["mixer"], h, cache, cfg, ax,
+                                            pos=pos)
+    x = x + mix.astype(x.dtype)
+    if "ffn" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        if is_moe:
+            out, _ = apply_moe(p["ffn"], h, cfg, ax)
+        else:
+            out = apply_mlp(p["ffn"], h, cfg, ax)
+        x = x + out.astype(x.dtype)
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params
+# ---------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    kinds = layer_kinds(cfg)
+    pfx, U, n_units = layout(cfg)
+    keys = jax.random.split(rng, 8)
+
+    params: Dict[str, Any] = {
+        "tok_embed": dense_init(keys[0], (cfg.vocab_size, cfg.d_model),
+                                in_axis=1, dtype=dtype),
+        "final": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.vocab_size, cfg.d_model),
+                                       in_axis=1, dtype=dtype)
+    if cfg.family in ("audio", "vlm"):
+        d_in = 1024 if cfg.family == "vlm" else cfg.d_model
+        params["frontend_proj"] = dense_init(keys[2], (d_in, cfg.d_model),
+                                             dtype=dtype)
+
+    if pfx:
+        pkeys = jax.random.split(keys[3], pfx)
+        params["prefix"] = {
+            str(i): init_block(pkeys[i], cfg, *kinds[i], dtype=dtype)
+            for i in range(pfx)}
+    if n_units:
+        ukinds = kinds[pfx:pfx + U]
+
+        def one_unit(k):
+            uk = jax.random.split(k, U)
+            return {str(i): init_block(uk[i], cfg, *ukinds[i], dtype=dtype)
+                    for i in range(U)}
+
+        params["units"] = jax.vmap(one_unit)(jax.random.split(keys[4], n_units))
+
+    if cfg.mtp_depth:
+        params["mtp"] = {
+            "proj": dense_init(keys[5], (2 * cfg.d_model, cfg.d_model),
+                               dtype=dtype),
+            "block": init_block(keys[6], cfg, "A",
+                                cfg.is_moe_layer(cfg.num_layers - 1),
+                                dtype=dtype),
+            "norm_h": init_norm(cfg),
+            "norm_e": init_norm(cfg),
+            "final": init_norm(cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+                 ax: MeshAxes):
+    """Token (+ stub-frontend) embedding. Returns x [B, S, D]."""
+    if cfg.family == "audio":
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+        if "frontend_proj" in params:
+            x = x @ params["frontend_proj"]
+        return shard(x, ax, ax.dp_spec, None, None)
+    tok = params["tok_embed"][batch["tokens"]]
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(jnp.dtype(cfg.dtype))
+        patches = patches @ params["frontend_proj"]
+        tok = jnp.concatenate([patches, tok], axis=1)
+    return shard(tok, ax, ax.dp_spec, None, None)
+
+
+def forward_lm(params, cfg: ModelConfig, batch, ax: MeshAxes,
+               remat: str = "unit"):
+    """Full-sequence forward -> (hidden [B,S,D], aux_loss)."""
+    kinds = layer_kinds(cfg)
+    pfx, U, n_units = layout(cfg)
+    x = embed_inputs(params, cfg, batch, ax)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    aux = jnp.zeros((), jnp.float32)
+
+    for i in range(pfx):
+        x, a = apply_block(params["prefix"][str(i)], x, positions, cfg, ax,
+                           *kinds[i])
+        aux = aux + a
+
+    if n_units:
+        ukinds = kinds[pfx:pfx + U]
+
+        def unit_body(carry, unit_params):
+            x, aux = carry
+            for i in range(U):
+                x, a = apply_block(unit_params[str(i)], x, positions, cfg, ax,
+                                   *ukinds[i])
+                aux = aux + a
+            return (x, aux), None
+
+        if remat != "none":
+            policy = None
+            if remat == "dots":
+                policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+            elif remat == "save_mixer":
+                policy = jax.checkpoint_policies.save_only_these_names(
+                    "mixer_out")
+            unit_body = jax.checkpoint(unit_body, policy=policy,
+                                       prevent_cse=False)
+        (x, aux), _ = jax.lax.scan(unit_body, (x, aux), params["units"],
+                                   unroll=n_units if cfg.unroll_scans else 1)
+
+    x = apply_norm(params["final"], x, cfg)
+    return x, aux
+
+
+
+def _logits_matmul(h2, w):
+    """h2 [T, D] bf16 x w [V, D] bf16 -> [T, V] fp32 via MXU fp32
+    accumulation. Contracting in bf16 keeps the ZeRO all-gather of the
+    embedding/lm_head in bf16 (pre-casting to fp32 doubled the gather
+    bytes — EXPERIMENTS.md §Perf hillclimb A)."""
+    return jax.lax.dot_general(
+        h2, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+def lm_logits(params, cfg: ModelConfig, hidden, ax: MeshAxes):
+    """Project hidden -> logits with token-dim sharding over dp x tp so the
+    [T, V] tensor is never replicated (see DESIGN.md §5)."""
+    B, S, D = hidden.shape
+    w = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    h2 = hidden.reshape(B * S, D)
+    tok_axes = tuple(a for a in (ax.dp + ((ax.tp,) if ax.tp else ())))
+    h2 = shard(h2, ax, tok_axes if tok_axes else None, None)
+    logits = _logits_matmul(h2, w)
+    logits = shard(logits, ax, tok_axes if tok_axes else None, None)
+    return logits  # [B*S, V], token-sharded
+
+
+# ---------------------------------------------------------------------------
+# Decode forward (one token)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int,
+               dtype=jnp.bfloat16) -> Dict[str, Any]:
+    kinds = layer_kinds(cfg)
+    pfx, U, n_units = layout(cfg)
+    cache: Dict[str, Any] = {}
+    if pfx:
+        cache["prefix"] = {
+            str(i): init_block_cache(cfg, kinds[i][0], batch, seq_len, dtype)
+            for i in range(pfx)}
+    if n_units:
+        ukinds = kinds[pfx:pfx + U]
+
+        def one_unit(_):
+            return {str(i): init_block_cache(cfg, ukinds[i][0], batch,
+                                             seq_len, dtype)
+                    for i in range(U)}
+
+        cache["units"] = jax.vmap(one_unit)(jnp.arange(n_units))
+    return cache
+
+
+def forward_decode(params, cfg: ModelConfig, tokens, cache, pos,
+                   ax: MeshAxes):
+    """One-token decode. tokens: [B, 1]; pos: scalar int32.
+
+    Returns (logits [B, V], new cache).
+    """
+    kinds = layer_kinds(cfg)
+    pfx, U, n_units = layout(cfg)
+    x = params["tok_embed"][tokens]
+    x = shard(x, ax, ax.dp_spec, None, None)
+
+    new_cache: Dict[str, Any] = {}
+    if pfx:
+        new_cache["prefix"] = {}
+        for i in range(pfx):
+            x, c = apply_block_decode(params["prefix"][str(i)], x,
+                                      cache["prefix"][str(i)], pos, cfg, ax,
+                                      *kinds[i])
+            new_cache["prefix"][str(i)] = c
+
+    if n_units:
+        ukinds = kinds[pfx:pfx + U]
+
+        def unit_body(x, scanned):
+            unit_params, unit_cache = scanned
+            out_cache = {}
+            for i in range(U):
+                x, c = apply_block_decode(unit_params[str(i)], x,
+                                          unit_cache[str(i)], pos, cfg, ax,
+                                          *ukinds[i])
+                out_cache[str(i)] = c
+            return x, out_cache
+
+        x, new_cache["units"] = jax.lax.scan(
+            unit_body, x, (params["units"], cache["units"]),
+            unroll=n_units if cfg.unroll_scans else 1)
+
+    x = apply_norm(params["final"], x, cfg)
+    w = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = _logits_matmul(x[:, 0], w)
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full sequence -> cache + last-token logits)
+# ---------------------------------------------------------------------------
+
+def _block_prefill(p, x, positions, cfg: ModelConfig, ax: MeshAxes,
+                   kind: str, is_moe: bool, cache_len: int):
+    """Full-sequence block that also emits the decode-cache state."""
+    h = apply_norm(p["ln1"], x, cfg)
+    S = x.shape[1]
+    if kind == "A":
+        if cfg.mla is not None:
+            mix, (c_kv, k_rope) = attn_mod.apply_mla(
+                p["mixer"], h, positions, cfg, ax, return_kv=True)
+            pad = cache_len - S
+            state = MLACache(
+                c_kv=jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                k_rope=jnp.pad(k_rope, ((0, 0), (0, pad), (0, 0))))
+        else:
+            mix, (k, v) = attn_mod.apply_attention(
+                p["mixer"], h, positions, cfg, ax, return_kv=True)
+            pad = cache_len - S
+            state = KVCache(
+                k=jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                v=jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    elif kind == "M":
+        mix, state = mamba_mod.apply_mamba(p["mixer"], h, cfg, ax,
+                                           return_state=True)
+    elif kind == "L":
+        mix, state = xlstm_mod.apply_mlstm(p["mixer"], h, cfg, ax,
+                                           return_state=True)
+    else:
+        mix, state = xlstm_mod.apply_slstm(p["mixer"], h, cfg, ax,
+                                           return_state=True)
+    x = x + mix.astype(x.dtype)
+    x = shard(x, ax, ax.dp_spec, None, None)
+    if "ffn" in p:
+        h = apply_norm(p["ln2"], x, cfg)
+        if is_moe:
+            out, _ = apply_moe(p["ffn"], h, cfg, ax)
+        else:
+            out = apply_mlp(p["ffn"], h, cfg, ax)
+        x = x + out.astype(x.dtype)
+        x = shard(x, ax, ax.dp_spec, None, None)
+    return x, state
+
+
+def forward_prefill(params, cfg: ModelConfig, batch, ax: MeshAxes,
+                    cache_len: Optional[int] = None):
+    """Prefill: full-sequence forward threading real decode caches out of
+    every layer.  Returns (last_logits [B, V], cache pytree)."""
+    kinds = layer_kinds(cfg)
+    pfx, U, n_units = layout(cfg)
+    x = embed_inputs(params, cfg, batch, ax)
+    S = x.shape[1]
+    clen = cache_len or S
+    positions = jnp.arange(S)
+
+    cache: Dict[str, Any] = {}
+    if pfx:
+        cache["prefix"] = {}
+        for i in range(pfx):
+            x, st = _block_prefill(params["prefix"][str(i)], x, positions,
+                                   cfg, ax, *kinds[i], cache_len=clen)
+            cache["prefix"][str(i)] = st
+
+    if n_units:
+        ukinds = kinds[pfx:pfx + U]
+
+        def unit_body(x, unit_params):
+            states = {}
+            for i in range(U):
+                x, st = _block_prefill(unit_params[str(i)], x, positions,
+                                       cfg, ax, *ukinds[i], cache_len=clen)
+                states[str(i)] = st
+            return x, states
+
+        x, cache["units"] = jax.lax.scan(
+            unit_body, x, params["units"],
+            unroll=n_units if cfg.unroll_scans else 1)
+
+    x = apply_norm(params["final"], x, cfg)
+    w = params["tok_embed"] if cfg.tie_embeddings else params["lm_head"]
+    last = _logits_matmul(x[:, -1], w)
+    return last, cache

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                               global_norm)
+from repro.optim.schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,91 @@
+"""AdamW implemented from scratch (no optax in this environment).
+
+Optimizer states inherit their parameter's sharding (ZeRO: the state
+lives wherever the param shard lives).  ``state_dtype`` lets big-MoE
+configs halve optimizer HBM (bf16 moments with stochastic-rounding-free
+update is a documented trade-off).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _decay_mask(path: str) -> bool:
+    """No weight decay on norms/biases/scalars."""
+    lowered = path.lower()
+    return not any(s in lowered for s in ("norm", "bias", "scale", "a_log",
+                                          "dt_bias", "/d",))
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig,
+                 lr_schedule: Optional[Callable] = None
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = opt_state["count"] + 1
+    lr = cfg.lr if lr_schedule is None else lr_schedule(count)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+    dt = jnp.dtype(cfg.state_dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(opt_state["m"])
+    flat_v = jax.tree_util.tree_leaves(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for (kp, p), g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        gf = g.astype(jnp.float32) * scale
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        upd = (mf / c1) / (jnp.sqrt(vf / c2) + cfg.eps)
+        if cfg.weight_decay and _decay_mask(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_m.append(mf.astype(dt))
+        new_v.append(vf.astype(dt))
+
+    params2 = jax.tree_util.tree_unflatten(treedef, new_p)
+    opt2 = {
+        "m": jax.tree_util.tree_unflatten(treedef, new_m),
+        "v": jax.tree_util.tree_unflatten(treedef, new_v),
+        "count": count,
+    }
+    return params2, opt2, {"grad_norm": gnorm, "lr": jnp.asarray(lr)}

@@ -1,0 +1,127 @@
+"""Batched serving engine: slot-based continuous batching.
+
+A fixed pool of ``batch`` slots shares one decode executable (static
+shapes — TPU-friendly).  New requests prefill into a free slot's cache
+region; every engine tick decodes one token for all active slots.  This
+is the vLLM-style design point reduced to its TPU-native skeleton:
+static batch, per-slot position counters, slot recycling on EOS.
+
+The per-slot prefill uses the same ``forward_prefill`` the dry-run
+lowers, writing the new cache into the slot via a donated buffer update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes
+from repro.models import transformer as tfm
+from repro.models.lm import serve_decode
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: jnp.ndarray          # [S] int32
+    max_new: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, ax: MeshAxes,
+                 batch: int = 4, max_len: int = 256,
+                 eos_id: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.ax = ax
+        self.batch = batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = tfm.init_cache(cfg, batch, max_len)
+        self.pos = jnp.zeros((batch,), jnp.int32)
+        self.active: List[Optional[Request]] = [None] * batch
+        self.budget = jnp.zeros((batch,), jnp.int32)
+        self.last_tok = jnp.zeros((batch, 1), jnp.int32)
+
+        self._decode = jax.jit(
+            lambda p, c, t, pos: serve_decode(p, cfg, c, t, pos, ax),
+            donate_argnums=(1,))
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def submit(self, req: Request) -> bool:
+        """Prefill a request into a free slot. False if engine is full.
+
+        Per-slot position vectors (-1 = inactive) let slots run
+        desynchronised — attention caches mask by per-slot length and
+        SSM states freeze on inactive slots.
+        """
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        req.out_tokens = []
+        toks = req.prompt
+        for t in range(toks.shape[0]):
+            posv = jnp.full((self.batch,), -1, jnp.int32).at[slot].set(t)
+            logits, self.cache = self._decode(
+                self.params, self.cache,
+                self._slot_token(slot, toks[t]), posv)
+        self.pos = self.pos.at[slot].set(toks.shape[0])
+        nxt = jnp.argmax(logits[slot]).astype(jnp.int32)
+        self.last_tok = self.last_tok.at[slot, 0].set(nxt)
+        req.out_tokens.append(int(nxt))
+        self.budget = self.budget.at[slot].set(req.max_new - 1)
+        self.active[slot] = req
+        return True
+
+    def _slot_token(self, slot: int, tok) -> jnp.ndarray:
+        t = jnp.zeros((self.batch, 1), jnp.int32)
+        return t.at[slot, 0].set(tok)
+
+    # ------------------------------------------------------------------
+    def tick(self) -> List[Request]:
+        """One decode step for all active slots; returns finished reqs."""
+        if not any(r is not None for r in self.active):
+            return []
+        act = jnp.asarray([r is not None for r in self.active])
+        posv = jnp.where(act, self.pos, -1).astype(jnp.int32)
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          self.last_tok, posv)
+        self.pos = jnp.where(act, self.pos + 1, self.pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.last_tok = jnp.where(act, nxt, self.last_tok[:, 0])[:, None]
+        finished = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            tok = int(nxt[i])
+            r.out_tokens.append(tok)
+            self.budget = self.budget.at[i].add(-1)
+            done = int(self.budget[i]) <= 0 or \
+                (self.eos_id is not None and tok == self.eos_id)
+            if done:
+                finished.append(r)
+                self.active[i] = None
+        return finished
+
+    def run_to_completion(self, requests: List[Request],
+                          max_ticks: int = 10000) -> List[Request]:
+        done: List[Request] = []
+        pending = list(requests)
+        ticks = 0
+        while (pending or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            while pending and self._free_slot() is not None:
+                self.submit(pending.pop(0))
+            done.extend(self.tick())
+            ticks += 1
+        return done

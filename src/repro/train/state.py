@@ -1,0 +1,31 @@
+"""Train state pytree."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tfm
+from repro.optim.adamw import AdamWConfig, adamw_init
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Dict[str, Any]
+    step: jax.Array
+    # error-feedback residual for compressed cross-pod grad reduction
+    # (zeros-like params when enabled; empty dict otherwise)
+    ef: Any = ()
+
+
+def init_train_state(rng, cfg: ModelConfig, opt_cfg: AdamWConfig,
+                     compression: bool = False) -> TrainState:
+    params = tfm.init_params(rng, cfg)
+    opt = adamw_init(params, opt_cfg)
+    ef = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.bfloat16), params) if compression \
+        else ()
+    return TrainState(params=params, opt=opt, step=jnp.zeros((), jnp.int32),
+                      ef=ef)

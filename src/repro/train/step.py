@@ -1,0 +1,69 @@
+"""The distributed train step (LM family).
+
+``make_train_step`` returns a pure function (state, batch) -> (state,
+metrics) suitable for ``jax.jit`` with donated state.  Microbatching
+(gradient accumulation) runs as a ``lax.scan`` over microbatch slices so
+the compiled HLO is independent of the accumulation factor.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import MeshAxes
+from repro.models.lm import lm_loss
+from repro.optim.adamw import AdamWConfig, adamw_update
+from repro.train.state import TrainState
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, ax: MeshAxes,
+                    lr_schedule: Optional[Callable] = None,
+                    remat: str = "unit",
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """grad_transform: optional (grads, ef) -> (grads, ef) hook — used for
+    the int8 error-feedback cross-pod compression (distributed/compress)."""
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch, ax, remat=remat)
+
+    def train_step(state: TrainState, batch: Dict[str, Any]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(state.params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb)
+                gacc = jax.tree_util.tree_map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            metrics = {"ce": loss}
+
+        ef = state.ef
+        if grad_transform is not None:
+            grads, ef = grad_transform(grads, ef)
+
+        params, opt, om = adamw_update(state.params, grads, state.opt,
+                                       opt_cfg, lr_schedule)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return TrainState(params=params, opt=opt, step=state.step + 1,
+                          ef=ef), metrics
+
+    return train_step

@@ -1,0 +1,65 @@
+"""Production trainer loop: checkpointing, resume, heartbeats, straggler
+hooks, deterministic data order keyed on the step counter.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+
+class Trainer:
+    def __init__(self, step_fn: Callable, state: Any,
+                 data_fn: Callable[[int], Any],
+                 ckpt: Optional[CheckpointManager] = None,
+                 ckpt_every: int = 100,
+                 monitor: Optional[HeartbeatMonitor] = None,
+                 log_every: int = 10,
+                 log_fn: Callable[[str], None] = print):
+        self.step_fn = step_fn
+        self.state = state
+        self.data_fn = data_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.monitor = monitor
+        self.log_every = log_every
+        self.log = log_fn
+        self.history: list = []
+
+    def maybe_resume(self) -> int:
+        """Restore the newest checkpoint if one exists. Returns start step."""
+        if self.ckpt is None:
+            return 0
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return 0
+        self.state = self.ckpt.restore(latest, like=self.state)
+        self.log(f"[trainer] resumed from step {latest}")
+        return latest
+
+    def run(self, num_steps: int, start_step: Optional[int] = None) -> Any:
+        step0 = self.maybe_resume() if start_step is None else start_step
+        for step in range(step0, num_steps):
+            t0 = time.monotonic()
+            batch = self.data_fn(step)      # deterministic in step
+            self.state, metrics = self.step_fn(self.state, batch)
+            dt = time.monotonic() - t0
+            if self.monitor is not None:
+                self.monitor.heartbeat("worker0", step_time_s=dt)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = step
+            rec["dt_s"] = dt
+            self.history.append(rec)
+            if step % self.log_every == 0:
+                msg = " ".join(f"{k}={v:.4f}" for k, v in rec.items()
+                               if k in ("loss", "ce", "grad_norm", "recon"))
+                self.log(f"[trainer] step={step} {msg} ({dt:.2f}s)")
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1, self.state)
+        if self.ckpt is not None:
+            self.ckpt.save(num_steps, self.state, blocking=True)
+        return self.state

@@ -1,0 +1,109 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting shapes + finiteness (brief req.)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.registry import ARCHS, reduced, shape_cells
+from repro.distributed.sharding import MeshAxes
+from repro.models import transformer as tfm
+from repro.models.lm import lm_loss, serve_decode, serve_prefill
+from repro.optim.adamw import AdamWConfig
+from repro.train.state import init_train_state
+from repro.train.step import make_train_step
+
+AX = MeshAxes()
+B, S = 2, 32
+
+
+def _batch(cfg, rng):
+    if cfg.family == "audio":
+        return {"embeds": jax.random.normal(rng, (B, S, cfg.d_model)),
+                "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+                "mask": jax.random.bernoulli(rng, 0.3, (B, S))}
+    if cfg.family == "vlm":
+        P = cfg.frontend_embed_tokens
+        return {"tokens": jax.random.randint(rng, (B, S - P), 0,
+                                             cfg.vocab_size),
+                "patch_embeds": jax.random.normal(rng, (B, P, 1024)),
+                "labels": jax.random.randint(rng, (B, S - P), 0,
+                                             cfg.vocab_size)}
+    return {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+            "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_and_train_step(arch):
+    cfg = reduced(arch)
+    rng = jax.random.PRNGKey(0)
+    opt = AdamWConfig(lr=1e-3)
+    state = init_train_state(rng, cfg, opt)
+    step = jax.jit(make_train_step(cfg, opt, AX))
+    batch = _batch(cfg, rng)
+    state2, metrics = step(state, batch)
+    assert jnp.isfinite(metrics["loss"]), arch
+    assert float(metrics["loss"]) > 0
+    assert int(state2.step) == 1
+    # params changed
+    l0 = jax.tree_util.tree_leaves(state.params)[0]
+    l1 = jax.tree_util.tree_leaves(state2.params)[0]
+    assert not jnp.allclose(l0, l1)
+
+
+@pytest.mark.parametrize("arch", [a for a in sorted(ARCHS)
+                                  if ARCHS[a].causal])
+def test_decode_step(arch):
+    cfg = reduced(arch)
+    rng = jax.random.PRNGKey(0)
+    params = tfm.init_params(rng, cfg)
+    cache = tfm.init_cache(cfg, B, 64)
+    tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
+    logits, cache2 = serve_decode(params, cfg, cache, tok, jnp.int32(3), AX)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert jnp.isfinite(logits).all()
+
+
+@pytest.mark.parametrize("arch", ["qwen2-7b", "deepseek-v3-671b",
+                                  "jamba-v0.1-52b", "xlstm-350m",
+                                  "arctic-480b"])
+def test_decode_matches_full_forward(arch):
+    """Incremental decoding with the cache == full forward (fp32)."""
+    cfg = dataclasses.replace(reduced(arch), dtype="float32")
+    rng = jax.random.PRNGKey(1)
+    params = tfm.init_params(rng, cfg, dtype=jnp.float32)
+    toks = jax.random.randint(rng, (B, 16), 0, cfg.vocab_size)
+    hidden, _ = tfm.forward_lm(params, cfg, {"tokens": toks}, AX,
+                               remat="none")
+    w = params.get("lm_head", params["tok_embed"])
+    full = hidden[:, -1].astype(jnp.float32) @ w.T.astype(jnp.float32)
+    _, cache = serve_prefill(params, cfg, {"tokens": toks[:, :15]}, AX,
+                             cache_len=24)
+    dec, _ = serve_decode(params, cfg, cache, toks[:, 15:16],
+                          jnp.int32(15), AX)
+    rel = float(jnp.max(jnp.abs(dec - full)) /
+                (jnp.max(jnp.abs(full)) + 1e-9))
+    assert rel < 1e-4, f"{arch}: rel err {rel}"
+
+
+def test_shape_cell_skips():
+    cells = [c for a in ARCHS for c in shape_cells(a)]
+    # hubert: no decode cells
+    assert ("hubert-xlarge", "decode_32k") not in cells
+    assert ("hubert-xlarge", "long_500k") not in cells
+    # long_500k only for sub-quadratic archs
+    long_archs = {a for a, s in cells if s == "long_500k"}
+    assert long_archs == {"jamba-v0.1-52b", "xlstm-350m"}
+    assert len(cells) == 31
+
+
+def test_param_counts_match_nominal_sizes():
+    """Analytic param counts are in the right ballpark of the names."""
+    expected = {"mistral-nemo-12b": 12e9, "glm4-9b": 9e9,
+                "qwen2-7b": 7e9, "deepseek-v3-671b": 671e9,
+                "arctic-480b": 480e9, "jamba-v0.1-52b": 52e9,
+                "xlstm-350m": 350e6}
+    for arch, n in expected.items():
+        got = ARCHS[arch].param_count()
+        assert 0.5 * n < got < 1.6 * n, f"{arch}: {got:.3g} vs {n:.3g}"

@@ -9,12 +9,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.registry import get_isp_config
 from repro.isp.awb import apply_wb, awb_gains
 from repro.isp.demosaic import demosaic_mhc
 from repro.isp.dpc import dpc_correct
 from repro.isp.gamma import apply_gamma, gamma_lut, sharpen_luma
 from repro.isp.nlm import nlm_denoise
-from repro.isp.pipeline import default_params, isp_pipeline
+from repro.isp.pipeline import default_params, isp_pipeline, run_pipeline
+from repro.isp.tone import apply_saturation, reinhard_tonemap
 
 H = W = 128
 
@@ -45,5 +47,14 @@ def run(emit):
         f"{H}x{W}")
     emit("isp_sharpen_ycbcr", _time(jax.jit(
         lambda x: sharpen_luma(x, 0.3)), rgb), f"{H}x{W}")
+    emit("isp_tonemap", _time(jax.jit(
+        lambda x: reinhard_tonemap(x, 0.5)), rgb), f"{H}x{W}")
+    emit("isp_ccm_saturation", _time(jax.jit(
+        lambda x: apply_saturation(x, 1.2)), rgb), f"{H}x{W}")
     full = _time(jax.jit(lambda r: isp_pipeline(r, default_params())), raw)
     emit("isp_pipeline_full", full, f"{1e6 / full:.1f}fps")
+    # registry-built pipelines (stage orderings are jit-static configs)
+    for name in ("hdr", "fast_preview"):
+        cfg = get_isp_config(name)
+        t = _time(jax.jit(lambda r, c=cfg: run_pipeline(r, None, c)), raw)
+        emit(f"isp_pipeline_{name}", t, f"{1e6 / t:.1f}fps")

@@ -4,6 +4,9 @@ end-to-end (differentiable ISP — something the FPGA cannot do) on scenes
 with photometric drift, then show the NPU-driven ISP beating the static
 ISP as lighting changes.
 
+For the streaming/slot-based deployment of this loop (and reconfigured
+stage orderings via the ISP stage registry) see cognitive_stream.py.
+
   PYTHONPATH=src python examples/cognitive_loop.py [--steps 80]
 """
 import argparse

@@ -1,5 +1,7 @@
-from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig,  # noqa: F401
+from repro.configs.base import (DEFAULT_ISP_STAGES, ISPConfig,  # noqa: F401
+                                MLAConfig, ModelConfig, MoEConfig,
                                 SHAPES, SHAPES_BY_NAME, SNNConfig, SSMConfig,
                                 ShapeConfig)
-from repro.configs.registry import (ARCHS, SNN_ARCHS, get_config,  # noqa: F401
+from repro.configs.registry import (ARCHS, ISP_CONFIGS, SNN_ARCHS,  # noqa: F401
+                                    get_config, get_isp_config,
                                     get_snn_config, reduced, shape_cells)

@@ -192,6 +192,31 @@ SHAPES: Tuple[ShapeConfig, ...] = (
 SHAPES_BY_NAME = {s.name: s for s in SHAPES}
 
 
+# Default stage ordering = the paper's fixed §V pipeline.
+DEFAULT_ISP_STAGES: Tuple[str, ...] = (
+    "exposure", "dpc", "demosaic", "awb", "nlm", "gamma", "sharpen")
+
+
+@dataclasses.dataclass(frozen=True)
+class ISPConfig:
+    """A Cognitive-ISP pipeline: an ordered tuple of registered stage
+    names plus the backend their implementations resolve through (see
+    repro.isp.stages).  Frozen/hashable, so usable as a jit static arg;
+    reordering, dropping, or appending stages is a config edit, not a
+    code change — the software analogue of reprogramming the FPGA
+    datapath."""
+    name: str = "default"
+    stages: Tuple[str, ...] = DEFAULT_ISP_STAGES
+    backend: str = "jnp"            # "jnp" | "pallas" (registry-resolved)
+
+    @property
+    def control_dim(self) -> int:
+        """Derived width of the NPU control vector: one slot per
+        declared stage parameter, in pipeline order."""
+        from repro.isp.stages import control_dim_for   # avoid import cycle
+        return control_dim_for(self.stages)
+
+
 @dataclasses.dataclass(frozen=True)
 class SNNConfig:
     """Spiking backbone config (the paper's own architectures)."""
@@ -210,4 +235,7 @@ class SNNConfig:
     surrogate_beta: float = 4.0
     detect: bool = True             # detection head vs classification head
     num_anchors: int = 2
-    control_dim: int = 8            # cognitive control vector size
+    # Cognitive control vector size. 8 matches the default ISP pipeline;
+    # derive it from a stage ordering with ISPConfig.control_dim (see
+    # repro.core.npu.configure_for_isp) instead of hand-counting.
+    control_dim: int = 8

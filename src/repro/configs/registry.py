@@ -10,8 +10,9 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 from repro.configs import base
-from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig, SNNConfig,
-                                SSMConfig, ShapeConfig)
+from repro.configs.base import (DEFAULT_ISP_STAGES, ISPConfig, MLAConfig,
+                                ModelConfig, MoEConfig, SNNConfig, SSMConfig,
+                                ShapeConfig)
 
 # ---------------------------------------------------------------------------
 # Assigned architectures (shapes per brief; sources in DESIGN.md)
@@ -192,3 +193,26 @@ def reduced_snn(name: str) -> SNNConfig:
     return dataclasses.replace(
         SNN_ARCHS[name], base_channels=8, num_stages=2, time_steps=3,
         height=32, width=32)
+
+
+# ---------------------------------------------------------------------------
+# Named ISP pipelines (stage orderings over repro.isp.stages)
+# ---------------------------------------------------------------------------
+
+ISP_CONFIGS: Dict[str, ISPConfig] = {
+    "default": ISPConfig(name="default"),
+    "pallas": ISPConfig(name="pallas", backend="pallas"),
+    # HDR capture: tone-map after denoise, colour-matrix before gamma.
+    "hdr": ISPConfig(name="hdr",
+                     stages=DEFAULT_ISP_STAGES[:5]
+                     + ("tonemap", "ccm") + DEFAULT_ISP_STAGES[5:]),
+    # Latency-critical preview: drop NLM (the most expensive stage)
+    # and sharpen — bare exposure/DPC/demosaic/AWB/gamma, control_dim 6.
+    "fast_preview": ISPConfig(
+        name="fast_preview",
+        stages=("exposure", "dpc", "demosaic", "awb", "gamma")),
+}
+
+
+def get_isp_config(name: str) -> ISPConfig:
+    return ISP_CONFIGS[name]

@@ -1,3 +1,5 @@
 from repro.core.lif import lif_scan, lif_step, spike  # noqa: F401
-from repro.core.npu import NPUOutput, init_npu, npu_forward  # noqa: F401
-from repro.core.cognitive import CognitiveOutput, cognitive_step  # noqa: F401
+from repro.core.npu import (NPUOutput, configure_for_isp, init_npu,  # noqa: F401
+                            npu_forward)
+from repro.core.cognitive import (CognitiveOutput, cognitive_forward,  # noqa: F401
+                                  cognitive_step)

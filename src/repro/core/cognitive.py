@@ -2,35 +2,67 @@
 detects objects + lighting anomalies, and reconfigures the ISP on the
 fly so the RGB camera yields context-rich crops of the detected objects.
 
-``cognitive_step`` is the top-level integration module: one DVS window +
-one Bayer frame in, detections + corrected RGB out.
+``cognitive_forward`` is the registry-native integration module: the
+NPU control vector is auto-mapped onto whatever stage ordering the
+``ISPConfig`` names (ranges come from the registered ``ParamSpec``s, so
+``control_dim`` is derived, never hand-indexed).  ``cognitive_step`` is
+the seed-API shim over the legacy fixed 8-field mapping.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SNNConfig
+from repro.configs.base import ISPConfig, SNNConfig
 from repro.core.npu import NPUOutput, npu_forward
-from repro.isp.pipeline import ISPParams, control_to_params, isp_pipeline
+from repro.isp.pipeline import (ISPParams, control_to_params,
+                                control_vector_pipeline, isp_pipeline)
 
 
 class CognitiveOutput(NamedTuple):
     npu: NPUOutput
-    isp_params: ISPParams
+    isp_params: Any          # ISPParams (legacy) or {stage: {param: [B]}}
     rgb: jax.Array           # [B, H, W, 3] corrected RGB
+
+
+def cognitive_forward(npu_params, voxels, bayer, cfg: SNNConfig,
+                      isp_cfg: Optional[ISPConfig] = None) \
+        -> CognitiveOutput:
+    """voxels: [T, B, Hd, Wd, 2] DVS window; bayer: [B, H, W] mosaic.
+
+    The first ``isp_cfg.control_dim`` slots of the NPU control vector
+    drive the pipeline's declared parameters in stage order; the NPU
+    head may be wider (extra slots are spare capacity for stages added
+    later — see ``repro.core.npu.configure_for_isp``).  Heads trained
+    through the ``cognitive_step`` shim use the *legacy* slot order —
+    serve those via ``CognitiveEngine(control_order="legacy")`` or
+    permute with ``repro.isp.pipeline.legacy_control_permutation``."""
+    icfg = isp_cfg if isp_cfg is not None else ISPConfig()
+    need = icfg.control_dim
+    if cfg.control_dim < need:
+        raise ValueError(
+            f"NPU control_dim={cfg.control_dim} < {need} required by ISP "
+            f"pipeline {icfg.name!r} ({icfg.stages}); rebuild the NPU via "
+            f"configure_for_isp")
+    npu_out = npu_forward(npu_params, voxels, cfg)
+    from repro.isp.stages import control_to_stage_params
+    isp_p = jax.vmap(lambda c: control_to_stage_params(c, icfg.stages))(
+        npu_out.control[:, :need])
+    rgb = jax.vmap(lambda r, c: control_vector_pipeline(r, c, icfg))(
+        bayer, npu_out.control[:, :need])
+    return CognitiveOutput(npu=npu_out, isp_params=isp_p, rgb=rgb)
 
 
 def cognitive_step(npu_params, voxels, bayer, cfg: SNNConfig,
                    use_pallas: bool = False) -> CognitiveOutput:
-    """voxels: [T, B, Hd, Wd, 2] DVS window; bayer: [B, H, W] mosaic."""
+    """Seed-API shim: legacy fixed control mapping + default pipeline.
+    voxels: [T, B, Hd, Wd, 2] DVS window; bayer: [B, H, W] mosaic."""
     npu_out = npu_forward(npu_params, voxels, cfg)
     # per-image control vectors -> per-image ISP parameters
     isp_p = jax.vmap(control_to_params)(npu_out.control)
-    rgb = jax.vmap(lambda r, *leaves: isp_pipeline(
-        r, ISPParams(*leaves), use_pallas))(bayer, *isp_p)
+    rgb = jax.vmap(lambda r, p: isp_pipeline(r, p, use_pallas))(bayer, isp_p)
     return CognitiveOutput(npu=npu_out, isp_params=isp_p, rgb=rgb)
 
 

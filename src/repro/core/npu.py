@@ -8,12 +8,13 @@ profile.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import SNNConfig
+from repro.configs.base import ISPConfig, SNNConfig
 from repro.core.backbones import BACKBONES, backbone_out_channels
 from repro.core.layers import (apply_spiking_dense, init_spiking_dense)
 from repro.core.sparsity import activity_sparsity, tile_skip_fraction
@@ -25,6 +26,16 @@ class NPUOutput(NamedTuple):
     control: jax.Array         # [B, control_dim] in [0, 1]
     sparsity: jax.Array        # scalar: network activity sparsity
     tile_skip: jax.Array       # scalar: TPU tile-skip fraction
+
+
+def configure_for_isp(cfg: SNNConfig, isp_cfg: ISPConfig,
+                      spare: int = 0) -> SNNConfig:
+    """Size the control head from the ISP pipeline's declared stage
+    parameters instead of a hand-counted ``control_dim``.  ``spare``
+    reserves extra slots so stages can be appended to the pipeline
+    without re-initialising the NPU."""
+    return dataclasses.replace(cfg,
+                               control_dim=isp_cfg.control_dim + spare)
 
 
 def init_npu(rng, cfg: SNNConfig) -> Dict[str, Any]:

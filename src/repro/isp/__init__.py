@@ -1,1 +1,19 @@
-from repro.isp.pipeline import ISPParams, isp_pipeline, control_to_params  # noqa: F401
+"""Cognitive ISP: pluggable stage registry + pipeline runners.
+
+New API: register stages in :mod:`repro.isp.stages`, order them with an
+``ISPConfig``, and run via :func:`repro.isp.pipeline.run_pipeline` (or
+the NPU-driven :func:`control_vector_pipeline`).  The legacy fixed-field
+``ISPParams`` / ``isp_pipeline`` API is kept as a shim.
+"""
+from repro.isp.pipeline import (ISPParams, control_to_params,  # noqa: F401
+                                control_vector_pipeline, default_params,
+                                isp_pipeline, isp_pipeline_batch,
+                                legacy_control_permutation,
+                                params_to_stage_params, run_pipeline,
+                                run_pipeline_batch)
+from repro.isp.stages import (BACKENDS, STAGES, ParamSpec,  # noqa: F401
+                              Stage, control_dim_for,
+                              control_to_stage_params, default_stage_params,
+                              get_stage, register_backend, register_stage,
+                              register_stage_impl, stage_param_specs,
+                              stage_params_to_control)

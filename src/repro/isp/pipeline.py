@@ -1,27 +1,82 @@
-"""The Cognitive ISP pipeline (paper §V): DPC -> AWB -> MHC demosaic ->
-NLM -> gamma LUT -> YCbCr sharpening, with every stage parameterised by
-the NPU's control vector (§VI closed loop).
+"""The Cognitive ISP pipeline (paper §V), built from the pluggable stage
+registry in :mod:`repro.isp.stages`.
+
+The default ordering reproduces the paper's fixed pipeline — exposure ->
+DPC -> MHC demosaic -> AWB -> NLM -> gamma LUT -> YCbCr sharpening —
+but any ordering/subset/extension of registered stages runs through the
+same machinery (``ISPConfig.stages``), and backends ("jnp" | "pallas")
+are resolved per stage through the backend registry.
 
 All parameters are *traced* values: one compiled executable serves every
 control setting — the TPU analogue of the FPGA's run-time
 reconfigurability (no re-synthesis on parameter change).
+
+Back-compat shims: ``ISPParams`` / ``default_params`` /
+``control_to_params`` / ``isp_pipeline(raw, params, use_pallas)`` keep
+the seed's fixed-8-field API working on top of the registry.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.isp.awb import apply_wb, awb_gains
-from repro.isp.dpc import dpc_correct
-from repro.isp.demosaic import demosaic_mhc
-from repro.isp.gamma import apply_gamma, gamma_lut, sharpen_luma
-from repro.isp.nlm import nlm_denoise
+from repro.configs.base import DEFAULT_ISP_STAGES, ISPConfig
+from repro.isp.stages import (control_to_stage_params, default_stage_params,
+                              run_stages)
 
+
+def run_pipeline(raw, stage_params=None,
+                 config: Optional[ISPConfig] = None) -> jax.Array:
+    """raw: [H, W] RGGB Bayer mosaic in [0,1] -> RGB [H, W, 3].
+
+    ``stage_params``: {stage: {param: scalar}} as produced by
+    ``control_to_stage_params`` / ``default_stage_params``; missing
+    stages/params fall back to their registered defaults.
+    """
+    cfg = config if config is not None else ISPConfig()
+    return run_stages(raw, stage_params, cfg.stages, backend=cfg.backend)
+
+
+def run_pipeline_batch(raws, stage_params=None,
+                       config: Optional[ISPConfig] = None) -> jax.Array:
+    """raws: [B, H, W]; stage_params leaves may be scalars or [B]."""
+    cfg = config if config is not None else ISPConfig()
+    if stage_params is None:
+        stage_params = default_stage_params(cfg.stages)
+    return _vmap_pipeline(raws, stage_params,
+                          lambda r, p: run_pipeline(r, p, cfg))
+
+
+def control_vector_pipeline(raw, ctrl: jax.Array,
+                            config: Optional[ISPConfig] = None) -> jax.Array:
+    """NPU control vector in, corrected RGB out — the §VI hot path."""
+    cfg = config if config is not None else ISPConfig()
+    return run_pipeline(raw, control_to_stage_params(ctrl, cfg.stages), cfg)
+
+
+def _vmap_pipeline(raws, params, apply_one):
+    """Dispatch scalar-vs-batched params on *all* leaves: scalar params
+    broadcast across the batch; any [B] leaf makes the whole tree
+    per-image (scalars are broadcast up rather than guessed from one
+    arbitrary leaf)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves or all(jnp.ndim(l) == 0 for l in leaves):
+        return jax.vmap(lambda r: apply_one(r, params))(raws)
+    B = raws.shape[0]
+    bparams = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(jnp.asarray(l), (B,)), params)
+    return jax.vmap(apply_one)(raws, bparams)
+
+
+# ---------------------------------------------------------------------------
+# Back-compat shims (seed API)
+# ---------------------------------------------------------------------------
 
 class ISPParams(NamedTuple):
-    """Control state the NPU updates on the fly."""
+    """Legacy fixed control state (seed API). New code should use the
+    {stage: {param: value}} dicts from :mod:`repro.isp.stages`."""
     exposure_gain: jax.Array    # [0.5, 2.0] digital gain pre-pipeline
     wb_bias_r: jax.Array        # [0.5, 2.0] multiplicative AWB bias
     wb_bias_b: jax.Array        # [0.5, 2.0]
@@ -41,7 +96,10 @@ def default_params() -> ISPParams:
 
 
 def control_to_params(ctrl: jax.Array) -> ISPParams:
-    """Map the NPU's sigmoid control vector [control_dim>=8] to ranges."""
+    """Legacy hand-ordered mapping of the NPU's sigmoid control vector
+    [control_dim>=8] to ranges.  The registry derives this mapping from
+    ParamSpecs instead (``control_to_stage_params``), with slots laid
+    out in *pipeline* order rather than this historical order."""
     lerp = lambda lo, hi, t: lo + (hi - lo) * t
     return ISPParams(
         exposure_gain=lerp(0.5, 2.0, ctrl[0]),
@@ -54,48 +112,56 @@ def control_to_params(ctrl: jax.Array) -> ISPParams:
         awb_enable=ctrl[7])
 
 
+def params_to_stage_params(p: ISPParams) -> Dict[str, Dict[str, jax.Array]]:
+    """Lift the legacy NamedTuple onto the default stage ordering."""
+    return {
+        "exposure": {"gain": p.exposure_gain},
+        "dpc": {"threshold": p.dpc_threshold},
+        "demosaic": {},
+        "awb": {"enable": p.awb_enable, "bias_r": p.wb_bias_r,
+                "bias_b": p.wb_bias_b},
+        "nlm": {"strength": p.nlm_strength},
+        "gamma": {"gamma": p.gamma},
+        "sharpen": {"amount": p.sharpen},
+    }
+
+
+# The shim's historical control-slot order, as (stage, param) pairs.
+_LEGACY_CONTROL_ORDER = (
+    ("exposure", "gain"), ("awb", "bias_r"), ("awb", "bias_b"),
+    ("gamma", "gamma"), ("nlm", "strength"), ("sharpen", "amount"),
+    ("dpc", "threshold"), ("awb", "enable"))
+
+
+def legacy_control_permutation(stage_names=DEFAULT_ISP_STAGES):
+    """Bridge for control heads trained through the legacy shim
+    (``cognitive_step`` / ``control_to_params``), whose slots follow the
+    historical hand-picked order rather than pipeline order.  Returns
+    ``perm`` with ``perm[i]`` = legacy slot feeding pipeline-ordered
+    slot ``i``, i.e. ``ctrl_pipeline = ctrl_legacy[perm]``.  Raises if
+    the stage ordering declares a parameter the legacy layout lacks."""
+    from repro.isp.stages import stage_param_specs
+    pairs = [(s, spec.name) for s, spec in stage_param_specs(stage_names)]
+    missing = [p for p in pairs if p not in _LEGACY_CONTROL_ORDER]
+    if missing:
+        raise ValueError(
+            f"stages declare params outside the legacy control layout: "
+            f"{missing}; retrain the head with the pipeline-order mapping")
+    return tuple(_LEGACY_CONTROL_ORDER.index(p) for p in pairs)
+
+
 def isp_pipeline(raw, params: Optional[ISPParams] = None,
                  use_pallas: bool = False):
-    """raw: [H, W] RGGB Bayer mosaic in [0,1] -> RGB [H, W, 3].
-
-    ``use_pallas`` switches demosaic/NLM to the Pallas TPU kernels
-    (kernels/ops.py); default is the pure-jnp path (CPU/dry-run safe).
-    """
+    """Legacy entry point: fixed default stage ordering, ``use_pallas``
+    selecting the "pallas" backend.  Routed through the registry."""
     p = params if params is not None else default_params()
-
-    # 1. exposure (digital gain) + defective pixel correction on the mosaic
-    raw = jnp.clip(raw * p.exposure_gain, 0.0, 1.0)
-    raw, _ = dpc_correct(raw, threshold=p.dpc_threshold)
-
-    # 2. demosaic (MHC 5x5)
-    if use_pallas:
-        from repro.kernels.ops import demosaic_op
-        rgb = demosaic_op(raw)
-    else:
-        rgb = demosaic_mhc(raw)
-
-    # 3. white balance: auto gains, softly blended, with NPU bias
-    gains = awb_gains(rgb)
-    gains = p.awb_enable * gains + (1.0 - p.awb_enable) * jnp.ones(3)
-    rgb = apply_wb(rgb, gains, npu_bias=jnp.stack([p.wb_bias_r, p.wb_bias_b]))
-
-    # 4. NLM denoise
-    if use_pallas:
-        from repro.kernels.ops import nlm_op
-        rgb = nlm_op(rgb, p.nlm_strength)
-    else:
-        rgb = nlm_denoise(rgb, strength=p.nlm_strength)
-
-    # 5. gamma LUT + luma sharpening in YCbCr
-    rgb = apply_gamma(rgb, gamma_lut(p.gamma))
-    rgb = sharpen_luma(rgb, p.sharpen)
-    return rgb
+    cfg = ISPConfig(stages=DEFAULT_ISP_STAGES,
+                    backend="pallas" if use_pallas else "jnp")
+    return run_pipeline(raw, params_to_stage_params(p), cfg)
 
 
 def isp_pipeline_batch(raws, params: ISPParams, use_pallas: bool = False):
     """raws: [B, H, W]; params leaves may be scalars or [B]-vectors."""
-    scalar = params.gamma.ndim == 0
-    if scalar:
-        return jax.vmap(lambda r: isp_pipeline(r, params, use_pallas))(raws)
-    return jax.vmap(lambda r, *leaves: isp_pipeline(
-        r, ISPParams(*leaves), use_pallas))(raws, *params)
+    return _vmap_pipeline(
+        raws, params,
+        lambda r, p: isp_pipeline(r, p, use_pallas))

@@ -2,6 +2,10 @@
 
 ``interpret`` defaults to True (this container is CPU-only; on TPU set
 REPRO_PALLAS_COMPILE=1 to lower natively via Mosaic).
+
+The ISP stage registry's "pallas" backend resolves to ``demosaic_op``
+and ``nlm_op`` here (lazily, from repro.isp.stages, so the pure-jnp
+path never imports Pallas).
 """
 from __future__ import annotations
 

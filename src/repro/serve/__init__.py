@@ -1,1 +1,4 @@
-from repro.serve.engine import ServeEngine  # noqa: F401
+from repro.serve.cognitive_engine import (CognitiveEngine,  # noqa: F401
+                                          PerceptionRequest,
+                                          PerceptionResult)
+from repro.serve.engine import Request, ServeEngine  # noqa: F401

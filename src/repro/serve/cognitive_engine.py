@@ -1,0 +1,164 @@
+"""Streaming engine for the cognitive perception loop: slot-based
+batching of ``npu_forward -> control -> ISP`` (paper §VI as a servable
+workload, mirroring ``ServeEngine``'s design).
+
+A fixed pool of ``batch`` slots shares ONE jit-compiled step executable
+(static shapes — TPU-friendly).  Clients ``submit`` perception requests
+(one DVS voxel window + one Bayer frame); every ``tick`` runs the whole
+active batch through the NPU and the registry-built ISP pipeline, hands
+back finished requests, and recycles their slots.  Unlike the LM engine
+there is no autoregressive tail: a perception request completes in a
+single tick, so throughput is ``batch`` frames per executable launch and
+the slot machinery exists to keep the batch full under ragged arrival.
+
+The ISP stage ordering/backend comes from an ``ISPConfig``; the NPU
+control vector is auto-mapped onto the declared stage parameter ranges,
+so swapping in a reordered or extended pipeline (e.g. the "hdr" config)
+is a constructor argument, not a code change.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ISPConfig, SNNConfig
+from repro.core.npu import npu_forward
+from repro.isp.pipeline import (control_vector_pipeline,
+                                legacy_control_permutation)
+from repro.isp.stages import control_to_stage_params
+
+
+class PerceptionResult(NamedTuple):
+    rgb: jnp.ndarray            # [H, W, 3] corrected RGB
+    control: jnp.ndarray        # [control_dim] raw NPU control vector
+    raw_pred: jnp.ndarray       # detection head output for this frame
+    stage_params: Dict[str, Dict[str, jnp.ndarray]]
+
+
+@dataclasses.dataclass
+class PerceptionRequest:
+    rid: int
+    voxels: jnp.ndarray          # [T, Hd, Wd, 2] DVS voxel window
+    bayer: jnp.ndarray           # [H, W] RGGB mosaic in [0, 1]
+    result: Optional[PerceptionResult] = None
+
+
+class CognitiveEngine:
+    """Slot-based streaming front-end over the cognitive loop."""
+
+    def __init__(self, npu_params, cfg: SNNConfig,
+                 isp_cfg: Optional[ISPConfig] = None, batch: int = 4,
+                 frame_hw: Optional[tuple] = None,
+                 control_order: str = "pipeline"):
+        """``control_order``: how the NPU head's slots are laid out.
+        "pipeline" (default) is the registry's derived stage order;
+        "legacy" serves heads trained through the ``cognitive_step`` /
+        ``control_to_params`` shim (historical hand-picked slot order)
+        by permuting the control vector before range mapping."""
+        self.params = npu_params
+        self.cfg = cfg
+        self.isp_cfg = isp_cfg if isp_cfg is not None else ISPConfig()
+        need = self.isp_cfg.control_dim
+        if cfg.control_dim < need:
+            raise ValueError(
+                f"NPU control_dim={cfg.control_dim} < {need} needed by ISP "
+                f"pipeline {self.isp_cfg.name!r}; build the SNNConfig with "
+                f"repro.core.npu.configure_for_isp")
+        self.batch = batch
+        H, W = frame_hw if frame_hw is not None else (cfg.height, cfg.width)
+        # static slot buffers: inactive slots carry zeros and ride along
+        # in the fixed-shape executable (their outputs are discarded).
+        self.voxels = jnp.zeros(
+            (cfg.time_steps, batch, cfg.height, cfg.width, cfg.in_channels),
+            jnp.float32)
+        self.bayer = jnp.zeros((batch, H, W), jnp.float32)
+        self.active: List[Optional[PerceptionRequest]] = [None] * batch
+        self.ticks = 0
+
+        if control_order not in ("pipeline", "legacy"):
+            raise ValueError(f"control_order must be 'pipeline' or "
+                             f"'legacy', got {control_order!r}")
+        perm = None
+        if control_order == "legacy":
+            p = legacy_control_permutation(self.isp_cfg.stages)
+            # the permutation gathers *legacy* slot positions, which may
+            # exceed the pipeline's derived width (a subset pipeline
+            # still reads the historical 8-slot layout) — an undersized
+            # head would silently clamp the gather otherwise
+            if cfg.control_dim <= max(p):
+                raise ValueError(
+                    f"NPU control_dim={cfg.control_dim} too narrow for "
+                    f"the legacy slot layout (needs > {max(p)})")
+            perm = jnp.asarray(p, jnp.int32)
+        icfg, ncfg, nd = self.isp_cfg, cfg, need
+
+        def _step(params, voxels, bayer):
+            out = npu_forward(params, voxels, ncfg)
+            ctrl = out.control[:, perm] if perm is not None \
+                else out.control[:, :nd]
+            rgb = jax.vmap(
+                lambda r, c: control_vector_pipeline(r, c, icfg))(bayer, ctrl)
+            sp = jax.vmap(
+                lambda c: control_to_stage_params(c, icfg.stages))(ctrl)
+            return out, rgb, sp
+
+        # one executable serves every tick / control setting (the FPGA
+        # runtime-reconfigurability analogue, same as ServeEngine._decode)
+        self._step = jax.jit(_step)
+
+    # ------------------------------------------------------------------
+    def _free_slot(self) -> Optional[int]:
+        for i, r in enumerate(self.active):
+            if r is None:
+                return i
+        return None
+
+    def submit(self, req: PerceptionRequest) -> bool:
+        """Stage a request into a free slot. False if the engine is full."""
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        self.voxels = self.voxels.at[:, slot].set(
+            jnp.asarray(req.voxels, jnp.float32))
+        self.bayer = self.bayer.at[slot].set(
+            jnp.asarray(req.bayer, jnp.float32))
+        self.active[slot] = req
+        return True
+
+    # ------------------------------------------------------------------
+    def tick(self) -> List[PerceptionRequest]:
+        """Run one batched perception step; returns finished requests
+        (every active request completes — perception has no decode tail)
+        and recycles their slots."""
+        if not any(r is not None for r in self.active):
+            return []
+        out, rgb, sp = self._step(self.params, self.voxels, self.bayer)
+        self.ticks += 1
+        finished: List[PerceptionRequest] = []
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.result = PerceptionResult(
+                rgb=rgb[i], control=out.control[i],
+                raw_pred=out.raw_pred[i],
+                stage_params=jax.tree_util.tree_map(lambda x: x[i], sp))
+            finished.append(r)
+            self.active[i] = None
+        return finished
+
+    def run_to_completion(self, requests: List[PerceptionRequest],
+                          max_ticks: int = 10000) \
+            -> List[PerceptionRequest]:
+        done: List[PerceptionRequest] = []
+        pending = list(requests)
+        ticks = 0
+        while (pending or any(r is not None for r in self.active)) \
+                and ticks < max_ticks:
+            while pending and self._free_slot() is not None:
+                self.submit(pending.pop(0))
+            done.extend(self.tick())
+            ticks += 1
+        return done

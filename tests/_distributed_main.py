@@ -19,6 +19,14 @@ from repro.train.state import init_train_state
 from repro.train.step import make_train_step
 
 
+def _mesh_context(mesh):
+    """jax.sharding.set_mesh landed after 0.4.x; on older jax the Mesh
+    object itself is the equivalent context manager."""
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
+
 def check_sharded_loss_matches_local():
     """pjit on a (2 data, 4 model) mesh == single-device math, incl. the
     shard_map MoE and the ZeRO param shardings."""
@@ -38,7 +46,7 @@ def check_sharded_loss_matches_local():
                  "labels": jax.random.randint(rng, (4, 32), 0,
                                               cfg.vocab_size)}
         l_local, _ = lm_loss(params, cfg, batch, local, remat="none")
-        with jax.sharding.set_mesh(mesh):
+        with _mesh_context(mesh):
             l_dist, _ = jax.jit(
                 lambda p, b: lm_loss(p, cfg, b, ax, remat="none")
             )(params, batch)
@@ -67,7 +75,7 @@ def check_sharded_decode_matches_local():
         tok = jax.random.randint(rng, (B, 1), 0, cfg.vocab_size)
         lg_local, _ = serve_decode(params, cfg, cache, tok, jnp.int32(10),
                                    local)
-        with jax.sharding.set_mesh(mesh):
+        with _mesh_context(mesh):
             lg_dist, _ = jax.jit(
                 lambda p, c, t: serve_decode(p, cfg, c, t, jnp.int32(10),
                                              ax))(params, cache, tok)
@@ -83,7 +91,7 @@ def check_sharded_train_step_runs():
     cfg = reduced("qwen2-7b")
     opt = AdamWConfig(lr=1e-3)
     rng = jax.random.PRNGKey(0)
-    with jax.sharding.set_mesh(mesh):
+    with _mesh_context(mesh):
         state = init_train_state(rng, cfg, opt)
         step = jax.jit(make_train_step(cfg, opt, ax), donate_argnums=(0,))
         batch = {"tokens": jax.random.randint(rng, (8, 32), 0,
@@ -127,7 +135,7 @@ def check_manual_dp_compression_step():
     step = make_manual_dp_train_step(loss_fn, ax, update)
     jstep = jax.jit(step)
     losses = []
-    with jax.sharding.set_mesh(mesh):
+    with _mesh_context(mesh):
         for i in range(6):
             scene = make_scene_batch(jax.random.PRNGKey(i), batch=8,
                                      height=cfg.height, width=cfg.width,

@@ -1,0 +1,152 @@
+"""CognitiveEngine streaming tests: submit/tick lifecycle, slot
+recycling, single-executable caching, and reconfigured pipelines
+end-to-end (acceptance: reordered/extra-stage pipeline through the
+engine)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ISPConfig
+from repro.configs.registry import get_isp_config, reduced_snn
+from repro.core.cognitive import cognitive_forward, cognitive_step
+from repro.core.encoding import voxel_batch
+from repro.core.npu import configure_for_isp, init_npu
+from repro.data.synthetic import make_scene_batch
+from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced_snn("spiking_yolo")
+    params = init_npu(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _requests(cfg, n, seed=0):
+    scene = make_scene_batch(jax.random.PRNGKey(seed), batch=n,
+                             height=cfg.height, width=cfg.width,
+                             time_steps=cfg.time_steps)
+    vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                      height=cfg.height, width=cfg.width)
+    return [PerceptionRequest(rid=i, voxels=vox[:, i], bayer=scene.bayer[i])
+            for i in range(n)]
+
+
+def test_submit_tick_smoke(setup):
+    cfg, params = setup
+    eng = CognitiveEngine(params, cfg, batch=2)
+    reqs = _requests(cfg, 2)
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    done = eng.tick()
+    assert {r.rid for r in done} == {0, 1}
+    for r in done:
+        assert r.result.rgb.shape == (cfg.height, cfg.width, 3)
+        assert r.result.control.shape == (cfg.control_dim,)
+        assert np.isfinite(np.asarray(r.result.rgb)).all()
+        assert "gamma" in r.result.stage_params
+
+
+def test_engine_full_then_recycles(setup):
+    cfg, params = setup
+    eng = CognitiveEngine(params, cfg, batch=2)
+    reqs = _requests(cfg, 3)
+    assert eng.submit(reqs[0]) and eng.submit(reqs[1])
+    assert not eng.submit(reqs[2])         # pool exhausted
+    eng.tick()
+    assert eng.submit(reqs[2])             # slot recycled
+    done = eng.tick()
+    assert [r.rid for r in done] == [2]
+
+
+def test_run_to_completion_single_executable(setup):
+    cfg, params = setup
+    eng = CognitiveEngine(params, cfg, batch=2)
+    done = eng.run_to_completion(_requests(cfg, 5))
+    assert len(done) == 5
+    assert eng.ticks == 3                  # ceil(5/2) batched launches
+    assert eng._step._cache_size() == 1    # one executable served all ticks
+
+
+def test_engine_matches_cognitive_step(setup):
+    """Default pipeline through the engine == one-shot cognitive_forward
+    (registry mapping) on the same frames."""
+    cfg, params = setup
+    reqs = _requests(cfg, 2, seed=3)
+    eng = CognitiveEngine(params, cfg, batch=2)
+    done = sorted(eng.run_to_completion(list(reqs)), key=lambda r: r.rid)
+    vox = jnp.stack([r.voxels for r in reqs], axis=1)
+    bayer = jnp.stack([r.bayer for r in reqs])
+    out = cognitive_forward(params, vox, bayer, cfg)
+    np.testing.assert_allclose(
+        jnp.stack([r.result.rgb for r in done]), out.rgb, atol=1e-5)
+
+
+def test_engine_with_extra_stage_pipeline(setup):
+    """Acceptance: a reordered/extended pipeline (hdr: +tonemap +ccm,
+    moved ahead of gamma) runs end-to-end through the engine with the
+    control head resized via configure_for_isp."""
+    cfg, _ = setup
+    hdr = get_isp_config("hdr")
+    cfg_hdr = configure_for_isp(cfg, hdr)
+    assert cfg_hdr.control_dim == hdr.control_dim == 10
+    params = init_npu(jax.random.PRNGKey(1), cfg_hdr)
+    eng = CognitiveEngine(params, cfg_hdr, hdr, batch=2)
+    done = eng.run_to_completion(_requests(cfg, 3))
+    assert len(done) == 3
+    for r in done:
+        assert r.result.rgb.shape == (cfg.height, cfg.width, 3)
+        sp = r.result.stage_params
+        assert "tonemap" in sp and "ccm" in sp
+        assert 0.0 <= float(sp["tonemap"]["strength"]) <= 1.0
+        assert 0.0 <= float(sp["ccm"]["saturation"]) <= 2.0
+
+
+def test_engine_legacy_control_order_matches_shim(setup):
+    """A head trained through the cognitive_step shim (legacy slot
+    order) serves unchanged via control_order='legacy': engine output ==
+    cognitive_step on the same frames. Pipeline-order serving of the
+    same head differs (slots would be reinterpreted)."""
+    cfg, params = setup
+    reqs = _requests(cfg, 2, seed=5)
+    vox = jnp.stack([r.voxels for r in reqs], axis=1)
+    bayer = jnp.stack([r.bayer for r in reqs])
+    ref = cognitive_step(params, vox, bayer, cfg)
+
+    eng = CognitiveEngine(params, cfg, batch=2, control_order="legacy")
+    done = sorted(eng.run_to_completion(list(reqs)), key=lambda r: r.rid)
+    np.testing.assert_allclose(
+        jnp.stack([r.result.rgb for r in done]), ref.rgb, atol=1e-5)
+
+    with pytest.raises(ValueError, match="control_order"):
+        CognitiveEngine(params, cfg, batch=2, control_order="typo")
+
+    # a subset pipeline in legacy mode still gathers the historical
+    # 8-slot layout: a 6-wide head must be rejected, not clamp-gathered
+    import dataclasses
+    from repro.configs import ISPConfig
+    preview = ISPConfig(name="preview", stages=(
+        "exposure", "dpc", "demosaic", "awb", "gamma"))
+    cfg6 = dataclasses.replace(cfg, control_dim=preview.control_dim)
+    params6 = init_npu(jax.random.PRNGKey(3), cfg6)
+    with pytest.raises(ValueError, match="legacy slot layout"):
+        CognitiveEngine(params6, cfg6, preview, batch=2,
+                        control_order="legacy")
+
+
+def test_engine_rejects_undersized_control_head(setup):
+    cfg, params = setup                    # control_dim=8 < hdr's 10
+    with pytest.raises(ValueError, match="configure_for_isp"):
+        CognitiveEngine(params, cfg, get_isp_config("hdr"), batch=2)
+
+
+def test_cognitive_step_shim_still_works(setup):
+    cfg, params = setup
+    scene = make_scene_batch(jax.random.PRNGKey(9), batch=2,
+                             height=cfg.height, width=cfg.width,
+                             time_steps=cfg.time_steps)
+    vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                      height=cfg.height, width=cfg.width)
+    out = cognitive_step(params, vox, scene.bayer, cfg)
+    assert out.rgb.shape == (2, cfg.height, cfg.width, 3)
+    assert out.isp_params.gamma.shape == (2,)   # legacy NamedTuple kept

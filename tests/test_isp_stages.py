@@ -1,0 +1,260 @@
+"""Stage-registry API tests: registration/ordering, derived control_dim,
+control-vector auto-mapping, legacy parity, jnp<->pallas backend parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DEFAULT_ISP_STAGES, ISPConfig, get_isp_config
+from repro.isp.awb import apply_wb, awb_gains
+from repro.isp.demosaic import demosaic_mhc
+from repro.isp.dpc import dpc_correct
+from repro.isp.gamma import apply_gamma, gamma_lut, sharpen_luma
+from repro.isp.nlm import nlm_denoise
+from repro.isp.pipeline import (ISPParams, control_to_params, default_params,
+                                isp_pipeline, isp_pipeline_batch,
+                                params_to_stage_params, run_pipeline)
+from repro.isp.stages import (STAGES, ParamSpec, control_dim_for,
+                              control_to_stage_params, default_stage_params,
+                              get_stage, register_stage,
+                              stage_param_specs, stage_params_to_control)
+
+RNG = np.random.default_rng(11)
+
+
+def _raw(h=64, w=64):
+    return jnp.asarray(RNG.random((h, w)).astype(np.float32))
+
+
+def _legacy_fixed_pipeline(raw, p: ISPParams):
+    """Verbatim re-statement of the seed's hardcoded pipeline body."""
+    raw = jnp.clip(raw * p.exposure_gain, 0.0, 1.0)
+    raw, _ = dpc_correct(raw, threshold=p.dpc_threshold)
+    rgb = demosaic_mhc(raw)
+    gains = awb_gains(rgb)
+    gains = p.awb_enable * gains + (1.0 - p.awb_enable) * jnp.ones(3)
+    rgb = apply_wb(rgb, gains, npu_bias=jnp.stack([p.wb_bias_r, p.wb_bias_b]))
+    rgb = nlm_denoise(rgb, strength=p.nlm_strength)
+    rgb = apply_gamma(rgb, gamma_lut(p.gamma))
+    rgb = sharpen_luma(rgb, p.sharpen)
+    return rgb
+
+
+# ---------------------------------------------------------------------------
+# registration / ordering
+# ---------------------------------------------------------------------------
+
+def test_default_stages_all_registered_in_order():
+    for name in DEFAULT_ISP_STAGES:
+        assert name in STAGES
+    assert DEFAULT_ISP_STAGES == (
+        "exposure", "dpc", "demosaic", "awb", "nlm", "gamma", "sharpen")
+
+
+def test_unknown_stage_raises():
+    with pytest.raises(KeyError, match="unknown ISP stage"):
+        get_stage("nope")
+
+
+def test_register_custom_stage_and_run():
+    def invert(x, p):
+        return p["amount"] * (1.0 - x) + (1.0 - p["amount"]) * x
+
+    register_stage("test_invert",
+                   (ParamSpec("amount", 0.0, 1.0, 1.0),), invert)
+    try:
+        cfg = ISPConfig(name="inv", stages=DEFAULT_ISP_STAGES
+                        + ("test_invert",))
+        assert cfg.control_dim == control_dim_for(DEFAULT_ISP_STAGES) + 1
+        raw = _raw()
+        base = run_pipeline(raw, None, ISPConfig())
+        out = run_pipeline(raw, None, cfg)
+        np.testing.assert_allclose(out, 1.0 - base, atol=1e-6)
+    finally:
+        del STAGES["test_invert"]
+
+
+def test_reordered_pipeline_runs_and_differs():
+    reordered = ISPConfig(name="r", stages=(
+        "exposure", "dpc", "demosaic", "nlm", "awb", "gamma", "sharpen"))
+    raw = _raw()
+    a = run_pipeline(raw, None, ISPConfig())
+    b = run_pipeline(raw, None, reordered)
+    assert a.shape == b.shape == (64, 64, 3)
+    assert not np.allclose(a, b)       # order matters -> distinct image
+
+
+# ---------------------------------------------------------------------------
+# control-vector auto-mapping
+# ---------------------------------------------------------------------------
+
+def test_control_dim_derived_from_specs():
+    assert control_dim_for(DEFAULT_ISP_STAGES) == 8   # matches seed layout
+    assert ISPConfig().control_dim == 8
+    hdr = get_isp_config("hdr")
+    assert hdr.control_dim == 10                      # +tonemap +ccm
+    assert len(stage_param_specs(hdr.stages)) == 10
+
+
+def test_control_mapping_round_trip():
+    stages = get_isp_config("hdr").stages
+    ctrl = jnp.asarray(RNG.random(control_dim_for(stages)), jnp.float32)
+    sp = control_to_stage_params(ctrl, stages)
+    back = stage_params_to_control(sp, stages)
+    np.testing.assert_allclose(back, ctrl, atol=1e-6)
+
+
+def test_control_mapping_respects_declared_ranges():
+    stages = DEFAULT_ISP_STAGES
+    lo = control_to_stage_params(jnp.zeros(8), stages)
+    hi = control_to_stage_params(jnp.ones(8), stages)
+    for sname, spec in stage_param_specs(stages):
+        assert float(lo[sname][spec.name]) == pytest.approx(spec.lo)
+        assert float(hi[sname][spec.name]) == pytest.approx(spec.hi)
+
+
+def test_legacy_control_permutation_bridges_slot_orders():
+    """With *distinct* slot values (an untrained head emits near-equal
+    slots, which would hide a wrong permutation), the permuted registry
+    mapping reproduces the legacy hand-ordered mapping exactly."""
+    from repro.isp.pipeline import legacy_control_permutation
+    ctrl = jnp.linspace(0.05, 0.95, 8)
+    perm = jnp.asarray(legacy_control_permutation())
+    legacy_sp = params_to_stage_params(control_to_params(ctrl))
+    reg_sp = control_to_stage_params(ctrl[perm], DEFAULT_ISP_STAGES)
+    for s, d in legacy_sp.items():
+        for k, v in d.items():
+            assert float(v) == pytest.approx(float(reg_sp[s][k]), abs=1e-6)
+    # pipelines whose params the legacy layout can't express are rejected
+    from repro.configs.registry import get_isp_config
+    with pytest.raises(ValueError, match="legacy control layout"):
+        legacy_control_permutation(get_isp_config("hdr").stages)
+
+
+def test_defaults_match_legacy_default_params():
+    sp = default_stage_params(DEFAULT_ISP_STAGES)
+    legacy = params_to_stage_params(default_params())
+    for stage, params in legacy.items():
+        for k, v in params.items():
+            assert float(sp[stage][k]) == pytest.approx(float(v))
+
+
+# ---------------------------------------------------------------------------
+# parity: legacy fixed pipeline vs registry-built pipeline
+# ---------------------------------------------------------------------------
+
+def test_registry_pipeline_matches_legacy_jnp():
+    raw = _raw()
+    for ctrl_val in (None, 0.25, 0.8):
+        p = default_params() if ctrl_val is None else \
+            control_to_params(jnp.full((8,), ctrl_val))
+        ref = _legacy_fixed_pipeline(raw, p)
+        out = isp_pipeline(raw, p)                      # registry-routed
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_registry_pipeline_matches_legacy_pallas():
+    raw = _raw()
+    ref = _legacy_fixed_pipeline(raw, default_params())
+    out = isp_pipeline(raw, default_params(), use_pallas=True)
+    np.testing.assert_allclose(out, ref, atol=1e-5)
+
+
+def test_per_stage_backend_parity():
+    """Each stage with a pallas impl matches its jnp reference."""
+    raw = _raw()
+    rgb = demosaic_mhc(raw)
+    for name in STAGES:
+        stage = STAGES[name]
+        if stage.impls.get("pallas") is None:
+            continue
+        x = raw if stage.domain == "bayer" else rgb
+        p = {s.name: jnp.float32(s.default) for s in stage.params}
+        np.testing.assert_allclose(stage.impl_for("pallas")(x, p),
+                                   stage.impl_for("jnp")(x, p), atol=1e-5)
+
+
+def test_unregistered_backend_rejected_registered_falls_back():
+    raw = _raw()
+    with pytest.raises(ValueError, match="unknown ISP backend"):
+        run_pipeline(raw, None, ISPConfig(backend="no_such_backend"))
+    # a registered backend with no per-stage impls falls back per stage
+    from repro.isp.stages import BACKENDS, register_backend
+    register_backend("test_empty")
+    try:
+        base = run_pipeline(raw, None, ISPConfig())
+        out = run_pipeline(raw, None, ISPConfig(backend="test_empty"))
+        np.testing.assert_allclose(out, base, atol=0)
+    finally:
+        BACKENDS.remove("test_empty")
+
+
+def test_replacing_stage_keeps_backend_impls():
+    """register_stage over an existing name keeps its pallas impl."""
+    nlm = STAGES["nlm"]
+    assert "pallas" in nlm.impls
+    register_stage("nlm", nlm.params, nlm.impls["jnp"], doc=nlm.doc)
+    try:
+        assert "pallas" in STAGES["nlm"].impls
+    finally:
+        STAGES["nlm"] = nlm
+
+
+def test_duplicate_stage_names_rejected_in_control_mapping():
+    with pytest.raises(ValueError, match="duplicate ISP stage"):
+        control_dim_for(("exposure", "dpc", "demosaic", "gamma", "gamma"))
+
+
+def test_typod_stage_or_param_keys_rejected():
+    raw = _raw()
+    with pytest.raises(KeyError, match="unknown ISP stage"):
+        run_pipeline(raw, {"sharppen": {"amount": 0.9}}, ISPConfig())
+    with pytest.raises(ValueError, match="unknown param"):
+        run_pipeline(raw, {"nlm": {"strenght": 0.9}}, ISPConfig())
+    # a full settings dict may drive a trimmed pipeline (extra
+    # registered stages are tolerated and ignored)
+    full = default_stage_params(DEFAULT_ISP_STAGES)
+    out = run_pipeline(raw, full, ISPConfig(
+        stages=("exposure", "dpc", "demosaic", "awb", "gamma")))
+    assert out.shape == (64, 64, 3)
+
+
+def test_domain_mismatch_rejected():
+    raw = _raw()
+    # rgb-domain stage before demosaic
+    with pytest.raises(ValueError, match="expects 'rgb' input"):
+        run_pipeline(raw, None, ISPConfig(stages=("tonemap", "demosaic")))
+    # bayer-domain stage after demosaic
+    with pytest.raises(ValueError, match="expects 'bayer' input"):
+        run_pipeline(raw, None, ISPConfig(stages=("demosaic", "dpc")))
+    # exposure is domain-agnostic: legal on either side of demosaic
+    out = run_pipeline(raw, None, ISPConfig(
+        stages=("dpc", "demosaic", "exposure", "gamma")))
+    assert out.shape == (64, 64, 3)
+
+
+# ---------------------------------------------------------------------------
+# batched dispatch (satellite: all-leaf dispatch)
+# ---------------------------------------------------------------------------
+
+def test_batch_dispatch_mixed_scalar_and_vector_leaves():
+    raws = jnp.asarray(RNG.random((3, 32, 32)).astype(np.float32))
+    p = default_params()._replace(
+        exposure_gain=jnp.asarray([0.6, 1.0, 1.8], jnp.float32))
+    out = isp_pipeline_batch(raws, p)       # gamma leaf scalar, gain [B]
+    assert out.shape == (3, 32, 32, 3)
+    per_image = [isp_pipeline(raws[i], default_params()._replace(
+        exposure_gain=p.exposure_gain[i])) for i in range(3)]
+    np.testing.assert_allclose(out, jnp.stack(per_image), atol=1e-6)
+
+
+def test_pipeline_single_compile_many_controls():
+    raw = _raw()
+    fn = jax.jit(run_pipeline, static_argnums=(2,))
+    cfg = ISPConfig()
+    o1 = fn(raw, control_to_stage_params(jnp.full((8,), 0.2), cfg.stages),
+            cfg)
+    o2 = fn(raw, control_to_stage_params(jnp.full((8,), 0.9), cfg.stages),
+            cfg)
+    assert fn._cache_size() == 1
+    assert not np.allclose(o1, o2)

@@ -1,6 +1,7 @@
-"""NPU throughput (paper §IV): event encoding rate, LIF scan, end-to-end
-spiking inference latency, and spike-sparsity / tile-skip rates that
-drive the event-driven compute saving.
+"""NPU throughput (paper §IV): event encoding rate across DVS scenarios
+and voxelizer backends, LIF scan, end-to-end spiking inference latency,
+the engine's raw-event ingestion path, and spike-sparsity / tile-skip
+rates that drive the event-driven compute saving.
 """
 from __future__ import annotations
 
@@ -10,11 +11,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import EncodingConfig
 from repro.configs.registry import reduced_snn
-from repro.core.encoding import voxel_batch
+from repro.core.encoding import events_to_voxel_batch, voxel_batch
 from repro.core.lif import lif_scan
 from repro.core.npu import init_npu, npu_forward
-from repro.data.synthetic import make_scene_batch
+from repro.data.synthetic import (SCENARIOS, make_scenario_batch,
+                                  make_scene_batch)
+from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
 
 
 def _time(fn, *args, reps=5):
@@ -56,3 +60,47 @@ def run(emit):
     # event-driven saving estimate: dense MACs vs spike-driven MACs
     voxel_rate = float(jnp.mean(vox > 0))
     emit("npu_input_event_rate", 0.0, f"{voxel_rate:.4f}")
+
+    # ingestion sweep: events/sec per DVS scenario x voxelizer backend
+    # (jnp scatter vs the Pallas event_voxel kernel; interpret mode on
+    # CPU, so the pallas row is a correctness/roofline anchor, not a
+    # speed claim — flip REPRO_PALLAS_COMPILE=1 on TPU)
+    B, N = 8, 1024
+    enc_jnp = jax.jit(lambda ev: events_to_voxel_batch(
+        ev, time_steps=cfg.time_steps, height=cfg.height, width=cfg.width))
+    for name in SCENARIOS:
+        evs = make_scenario_batch(name, jax.random.PRNGKey(2), B,
+                                  height=cfg.height, width=cfg.width,
+                                  n_events=N)
+        live = int(np.sum(np.asarray(evs.valid)))
+        t_us = _time(enc_jnp, evs)
+        emit(f"event_voxel_{name}_jnp", t_us, f"{live / t_us:.2f}Mev_s")
+    from repro.kernels.ops import event_voxel_op
+    enc_plls = jax.jit(lambda ev: event_voxel_op(
+        ev, time_steps=cfg.time_steps, height=cfg.height, width=cfg.width))
+    evs = make_scenario_batch("moving_bar", jax.random.PRNGKey(2), B,
+                              height=cfg.height, width=cfg.width, n_events=N)
+    live = int(np.sum(np.asarray(evs.valid)))
+    t_us = _time(enc_plls, evs, reps=2)
+    emit("event_voxel_moving_bar_pallas", t_us, f"{live / t_us:.2f}Mev_s")
+
+    # engine raw-event path: submit_events -> encode -> NPU -> ISP
+    eng = CognitiveEngine(params, cfg, batch=4,
+                          enc_cfg=EncodingConfig(event_capacity=N))
+    bayer = make_scene_batch(jax.random.PRNGKey(3), batch=4,
+                             height=cfg.height, width=cfg.width).bayer
+    def _drive():
+        for i in range(4):
+            eng.submit_events(PerceptionRequest(
+                rid=i, events=jax.tree_util.tree_map(lambda a: a[i], evs),
+                bayer=bayer[i]))
+        return eng.tick()
+    _drive()                                   # warm the tick executable
+    t0 = time.perf_counter()
+    reps = 5
+    for _ in range(reps):
+        done = _drive()
+    jax.block_until_ready(done[-1].result.rgb)
+    t_us = (time.perf_counter() - t0) / reps * 1e6
+    emit("engine_submit_events_tick", t_us,
+         f"{4 * (live / B) / t_us:.2f}Mev_s")   # aggregate over 4 slots

@@ -7,6 +7,12 @@ Also demos the stage registry: the same engine, pointed at the "hdr"
 pipeline (tonemap + colour-matrix stages spliced in before gamma), needs
 only a resized control head — no pipeline code changes.
 
+Also demos the raw-event ingestion path (paper §IV-A): requests can
+carry a bounded DVS event buffer instead of finished voxels —
+``submit_events`` budgets it into the slot FIFO and the SAME tick
+executable voxelizes it (scenario generators sweep the event-rate
+regimes: ego-motion, night flicker, noise storms, crossings).
+
   PYTHONPATH=src python examples/cognitive_stream.py [--frames 12]
 """
 import argparse
@@ -14,10 +20,11 @@ import time
 
 import jax
 
+from repro.configs import EncodingConfig
 from repro.configs.registry import get_isp_config, reduced_snn
 from repro.core.encoding import voxel_batch
 from repro.core.npu import configure_for_isp, init_npu
-from repro.data.synthetic import make_scene_batch
+from repro.data.synthetic import SCENARIOS, make_scenario, make_scene_batch
 from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
 
 
@@ -59,6 +66,21 @@ def main():
         print(f"  frame 0: NPU chose gamma="
               f"{float(r.stage_params['gamma']['gamma']):.2f} "
               f"nlm={float(r.stage_params['nlm']['strength']):.2f}")
+
+    print("\nraw-event ingestion (submit_events, encode inside the tick "
+          "executable):")
+    enc = EncodingConfig(event_capacity=1024)
+    eng_ev = CognitiveEngine(params, cfg, batch=args.batch, enc_cfg=enc)
+    bayer = make_scene_batch(jax.random.PRNGKey(2), batch=len(SCENARIOS),
+                             height=cfg.height, width=cfg.width).bayer
+    reqs = []
+    for i, name in enumerate(SCENARIOS):
+        ev = make_scenario(name, jax.random.PRNGKey(i), height=cfg.height,
+                           width=cfg.width, n_events=2048)  # overfull: budgeted
+        reqs.append(PerceptionRequest(rid=i, events=ev, bayer=bayer[i]))
+        print(f"  scenario {name!r}: {int(ev.num_events())} events "
+              f"-> FIFO of {enc.event_capacity}")
+    drive(eng_ev, reqs, "event stream")
 
     hdr = get_isp_config("hdr")
     print(f"\nhdr pipeline {hdr.stages} "

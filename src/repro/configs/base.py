@@ -218,6 +218,29 @@ class ISPConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class EncodingConfig:
+    """DVS ingestion policy (paper §IV-A): how raw event buffers become
+    voxel grids.  Frozen/hashable — the engine closes over it when
+    tracing the tick executable, so changing the policy is a
+    constructor argument, never a retrace-per-tick.
+
+    ``mode``: "binary" (paper one-hot) | "count" | "signed" (polarity-
+    split ``(ON - OFF, ON + OFF)`` channels).
+    ``oob``: boundary-timestamp policy — "clip" aliases ``t == window``
+    (and anything out of range) into the edge bins, "drop" discards.
+    ``event_capacity``: bounded per-window FIFO depth; overfull
+    submissions are budgeted down (earliest-first) on admission.
+    ``backend``: "jnp" reference or the "pallas" voxelization kernel.
+    """
+    name: str = "paper_binary"
+    mode: str = "binary"            # "binary" | "count" | "signed"
+    oob: str = "clip"               # "clip" | "drop"
+    window: float = 1.0
+    event_capacity: int = 2048
+    backend: str = "jnp"            # "jnp" | "pallas"
+
+
+@dataclasses.dataclass(frozen=True)
 class SNNConfig:
     """Spiking backbone config (the paper's own architectures)."""
     name: str = "spiking_yolo"

@@ -10,9 +10,9 @@ import dataclasses
 from typing import Dict, List, Tuple
 
 from repro.configs import base
-from repro.configs.base import (DEFAULT_ISP_STAGES, ISPConfig, MLAConfig,
-                                ModelConfig, MoEConfig, SNNConfig, SSMConfig,
-                                ShapeConfig)
+from repro.configs.base import (DEFAULT_ISP_STAGES, EncodingConfig,
+                                ISPConfig, MLAConfig, ModelConfig, MoEConfig,
+                                SNNConfig, SSMConfig, ShapeConfig)
 
 # ---------------------------------------------------------------------------
 # Assigned architectures (shapes per brief; sources in DESIGN.md)
@@ -216,3 +216,27 @@ ISP_CONFIGS: Dict[str, ISPConfig] = {
 
 def get_isp_config(name: str) -> ISPConfig:
     return ISP_CONFIGS[name]
+
+
+# ---------------------------------------------------------------------------
+# Named DVS ingestion policies (repro.core.encoding semantics)
+# ---------------------------------------------------------------------------
+
+ENCODING_CONFIGS: Dict[str, EncodingConfig] = {
+    # the paper's §IV-A one-hot encoding (boundary events alias in)
+    "paper_binary": EncodingConfig(name="paper_binary"),
+    # rate-preserving counts with strict window semantics
+    "count_strict": EncodingConfig(name="count_strict", mode="count",
+                                   oob="drop"),
+    # polarity-split (net, total) channels for motion-direction cues
+    "signed": EncodingConfig(name="signed", mode="signed"),
+    # kernel-backed ingestion hot path
+    "pallas": EncodingConfig(name="pallas", backend="pallas"),
+    # night/low-light traffic: tiny FIFO, drop stragglers
+    "night_lowrate": EncodingConfig(name="night_lowrate", mode="count",
+                                    oob="drop", event_capacity=256),
+}
+
+
+def get_encoding_config(name: str) -> EncodingConfig:
+    return ENCODING_CONFIGS[name]

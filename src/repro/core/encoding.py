@@ -4,44 +4,198 @@ spatio-temporal voxel grid.
 Events are tuples e = (t, x, y, p).  The continuous stream is segmented
 into a fixed temporal window, binned into ``time_steps`` bins, and
 scatter-accumulated into a tensor [T, H, W, P] (P = 2 polarities).
+
+This module is the pure-jnp REFERENCE for the Pallas voxelization kernel
+(``repro.kernels.event_voxel``); the two must stay bit-identical
+(tests/test_event_voxel.py).  Encoding semantics:
+
+- invalid events and out-of-bounds ``x``/``y``/``p`` are dropped (the
+  seed silently aliased stray coordinates into neighbouring voxels);
+- time bin = ``floor(t / window * time_steps)``; events landing outside
+  ``[0, time_steps)`` — including the boundary ``t == window`` — follow
+  the explicit ``oob`` policy: "clip" aliases them into the edge bins
+  (the seed's implicit behaviour), "drop" discards them;
+- ``mode``: "binary" (paper's one-hot occupancy), "count" (per-polarity
+  event counts), "signed" (polarity-split accumulation: the channel
+  axis carries ``(ON - OFF, ON + OFF)`` instead of ``(OFF, ON)``).
+
+It also provides the batched EventStream plumbing the ingestion
+subsystem is built on: stacking/concatenating bounded event buffers,
+validity-masked padding, and event budgeting for overfull windows.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+VOXEL_MODES = ("binary", "count", "signed")
+OOB_POLICIES = ("clip", "drop")
+
 
 class EventStream(NamedTuple):
     """Fixed-capacity event buffer (TPU needs static shapes; FPGA streams
-    map to a bounded event FIFO per window — same discipline)."""
-    t: jax.Array      # [N] float32 in [0, window)
-    x: jax.Array      # [N] int32
-    y: jax.Array      # [N] int32
-    p: jax.Array      # [N] int32 {0, 1}
-    valid: jax.Array  # [N] bool
+    map to a bounded event FIFO per window — same discipline).  Leaves
+    are [N] for a single window or [B, N] when batched."""
+    t: jax.Array      # [..., N] float32 in [0, window)
+    x: jax.Array      # [..., N] int32
+    y: jax.Array      # [..., N] int32
+    p: jax.Array      # [..., N] int32 {0, 1}
+    valid: jax.Array  # [..., N] bool
+
+    @property
+    def capacity(self) -> int:
+        return self.t.shape[-1]
+
+    def num_events(self) -> jax.Array:
+        """Live events per window: scalar ([] or [B])."""
+        return jnp.sum(self.valid, axis=-1)
+
+
+def _resolve_mode(mode: Optional[str], binary: bool) -> str:
+    if mode is None:
+        return "binary" if binary else "count"
+    if mode not in VOXEL_MODES:
+        raise ValueError(f"mode must be one of {VOXEL_MODES}, got {mode!r}")
+    return mode
 
 
 def events_to_voxel(ev: EventStream, *, time_steps: int, height: int,
-                    width: int, window: float = 1.0,
-                    binary: bool = True) -> jax.Array:
-    """-> voxel grid [T, H, W, 2]. ``binary`` gives the paper's one-hot
-    encoding; False accumulates event counts."""
-    tbin = jnp.clip((ev.t / window * time_steps).astype(jnp.int32),
-                    0, time_steps - 1)
+                    width: int, window: float = 1.0, binary: bool = True,
+                    mode: Optional[str] = None,
+                    oob: str = "clip") -> jax.Array:
+    """-> voxel grid [T, H, W, 2].  ``mode`` overrides the legacy
+    ``binary`` flag (True -> "binary", False -> "count")."""
+    mode = _resolve_mode(mode, binary)
+    if oob not in OOB_POLICIES:
+        raise ValueError(f"oob must be one of {OOB_POLICIES}, got {oob!r}")
+    tbin = jnp.floor(ev.t / window * time_steps).astype(jnp.int32)
+    ok = (ev.valid
+          & (ev.x >= 0) & (ev.x < width)
+          & (ev.y >= 0) & (ev.y < height)
+          & (ev.p >= 0) & (ev.p < 2))
+    if oob == "drop":
+        ok = ok & (tbin >= 0) & (tbin < time_steps)
+    tbin = jnp.clip(tbin, 0, time_steps - 1)
+    size = time_steps * height * width * 2
     flat = ((tbin * height + ev.y) * width + ev.x) * 2 + ev.p
-    flat = jnp.where(ev.valid, flat, time_steps * height * width * 2)
-    grid = jnp.zeros((time_steps * height * width * 2 + 1,), jnp.float32)
+    flat = jnp.where(ok, flat, size)        # dead events -> dump slot
+    grid = jnp.zeros((size + 1,), jnp.float32)
     grid = grid.at[flat].add(1.0)[:-1]
     grid = grid.reshape(time_steps, height, width, 2)
-    if binary:
+    if mode == "binary":
         grid = (grid > 0).astype(jnp.float32)
+    elif mode == "signed":
+        net = grid[..., 1] - grid[..., 0]
+        tot = grid[..., 1] + grid[..., 0]
+        grid = jnp.stack([net, tot], axis=-1)
     return grid
+
+
+def events_to_voxel_batch(evs: EventStream, **kw) -> jax.Array:
+    """Batched encoding, batch-major: leaves [B, N] -> [B, T, H, W, 2]
+    (the Pallas kernel's native layout)."""
+    return jax.vmap(lambda e: events_to_voxel(e, **kw))(evs)
 
 
 def voxel_batch(evs: EventStream, **kw) -> jax.Array:
     """Batched encoding: EventStream leaves have a leading batch dim.
     -> [T, B, H, W, 2] (time-major for the multi-step SNN layers)."""
-    v = jax.vmap(lambda e: events_to_voxel(e, **kw))(evs)   # [B,T,H,W,2]
-    return jnp.moveaxis(v, 0, 1)
+    return jnp.moveaxis(events_to_voxel_batch(evs, **kw), 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# EventStream batching / budgeting
+# ---------------------------------------------------------------------------
+
+def pad_stream(ev: EventStream, capacity: int) -> EventStream:
+    """Grow a stream ([N] or [B, N] leaves) to a fixed ``capacity``
+    with invalid padding (no-op when already that size; shrinking goes
+    through ``budget_events`` so which events survive is an explicit
+    policy)."""
+    n = ev.capacity
+    if n == capacity:
+        return ev
+    if n > capacity:
+        raise ValueError(
+            f"stream has capacity {n} > {capacity}; budget it first "
+            f"(repro.core.encoding.budget_events)")
+    # pad ONLY the capacity (last) axis — leaves may be [N] or [B, N]
+    widths = [(0, 0)] * (ev.t.ndim - 1) + [(0, capacity - n)]
+    return EventStream(
+        t=jnp.pad(ev.t, widths),
+        x=jnp.pad(ev.x, widths),
+        y=jnp.pad(ev.y, widths),
+        p=jnp.pad(ev.p, widths),
+        valid=jnp.pad(ev.valid, widths, constant_values=False))
+
+
+def stack_streams(streams: Sequence[EventStream],
+                  capacity: Optional[int] = None) -> EventStream:
+    """Stack single-window ([N]-leaf) streams of ragged capacity into one
+    batched stream with [B, max_N] leaves and validity-mask padding."""
+    if not streams:
+        raise ValueError("stack_streams needs at least one stream")
+    cap = capacity if capacity is not None \
+        else max(s.capacity for s in streams)
+    padded = [pad_stream(s, cap) for s in streams]
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *padded)
+
+
+def concat_streams(*streams: EventStream) -> EventStream:
+    """Merge event buffers along the capacity axis (e.g. several sensor
+    FIFO drains landing in one window).  Leaves may be [N] or [B, N]."""
+    if not streams:
+        raise ValueError("concat_streams needs at least one stream")
+    return jax.tree_util.tree_map(
+        lambda *ls: jnp.concatenate(ls, axis=-1), *streams)
+
+
+def budget_events(ev: EventStream, budget: int,
+                  rng: Optional[jax.Array] = None) -> EventStream:
+    """Downsample an overfull window to at most ``budget`` live events
+    and compact the buffer to exactly ``budget`` capacity (static
+    shapes: an [N]-leaf stream becomes [budget]-leaf; batched [B, N]
+    streams are budgeted per window).
+
+    Policy: keep the ``budget`` EARLIEST events (a causal FIFO drop-tail,
+    what a bounded sensor FIFO does) — or, with ``rng``, a uniform
+    random subsample of the live events (rate-invariant statistics).
+    Under-full windows keep every live event.
+    """
+    if budget <= 0:
+        raise ValueError(f"budget must be positive, got {budget}")
+    if ev.t.ndim > 1:
+        if rng is None:
+            return jax.vmap(lambda e: budget_events(e, budget))(ev)
+        keys = jax.random.split(rng, ev.t.shape[0])
+        return jax.vmap(lambda e, k: budget_events(e, budget, k))(ev, keys)
+    n = ev.capacity
+    if rng is None:
+        # earliest-first: invalid events sort to +inf, ties broken by
+        # buffer position (stable argsort) -> deterministic
+        score = jnp.where(ev.valid, ev.t, jnp.inf)
+    else:
+        score = jnp.where(ev.valid,
+                          jax.random.uniform(rng, (n,)), jnp.inf)
+    order = jnp.argsort(score, stable=True)
+    keep = order[:budget] if budget <= n \
+        else jnp.pad(order, (0, budget - n))
+    rank_ok = jnp.arange(budget) < jnp.minimum(n, budget)
+    return EventStream(
+        t=ev.t[keep],
+        x=ev.x[keep],
+        y=ev.y[keep],
+        p=ev.p[keep],
+        valid=ev.valid[keep] & rank_ok)
+
+
+def fit_stream(ev: EventStream, capacity: int,
+               rng: Optional[jax.Array] = None) -> EventStream:
+    """Coerce a single-window stream to EXACTLY ``capacity``: overfull
+    buffers are budgeted (see ``budget_events``), under-full ones padded
+    with invalid events.  This is the engine's admission path."""
+    if ev.capacity > capacity:
+        return budget_events(ev, capacity, rng)
+    return pad_stream(ev, capacity)

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: batched DVS event voxelization (paper §IV-A).
+
+FPGA insight -> TPU mapping: the FPGA front-end drains the event FIFO
+into BRAM-resident time-surface bins as events arrive; the TPU
+equivalent keeps the voxel block for a ``time_steps`` slice resident in
+VMEM and streams the (bounded) event buffer past it, so the scatter
+never round-trips HBM per event.
+
+Grid: ``(batch, ceil(T / block_t))`` — one program owns a
+``[block_t, H, W, 2]`` voxel slab in VMEM plus the sample's whole event
+buffer, loops the events once, and accumulates counts with predicated
+scalar stores (events outside the slab's time range contribute weight
+0).  Mode post-processing (binary threshold / signed polarity collapse)
+happens on the slab while it is still in VMEM.
+
+Semantics are defined by the jnp twin ``repro.core.encoding
+.events_to_voxel`` and must stay BIT-IDENTICAL to it (differential
+tests in tests/test_event_voxel.py):
+
+- invalid events and out-of-bounds ``x``/``y``/``p`` are dropped;
+- timestamps are binned by ``floor(t / window * T)``; out-of-range bins
+  follow ``oob``: "clip" aliases them into the edge bins, "drop"
+  discards the event;
+- ``mode``: "count" accumulates per-polarity counts, "binary"
+  thresholds occupancy to {0, 1}, "signed" rewrites the polarity axis
+  to (ON - OFF, ON + OFF).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# one source of truth with the jnp twin — the parity contract covers
+# the accepted configuration space too
+from repro.core.encoding import OOB_POLICIES, VOXEL_MODES as MODES
+
+
+def _voxel_kernel(t_ref, x_ref, y_ref, p_ref, v_ref, o_ref, *,
+                  n_events: int, block_t: int, time_steps: int,
+                  height: int, width: int, window: float, mode: str,
+                  oob: str):
+    o_ref[...] = jnp.zeros_like(o_ref)
+    t0 = pl.program_id(1) * block_t
+
+    def body(i, _):
+        tbin = jnp.floor(t_ref[0, i] / window * time_steps)
+        tbin = tbin.astype(jnp.int32)
+        xi, yi, pi = x_ref[0, i], y_ref[0, i], p_ref[0, i]
+        ok = ((v_ref[0, i] > 0)
+              & (xi >= 0) & (xi < width)
+              & (yi >= 0) & (yi < height)
+              & (pi >= 0) & (pi < 2))
+        if oob == "drop":
+            ok &= (tbin >= 0) & (tbin < time_steps)
+        tbin = jnp.clip(tbin, 0, time_steps - 1)
+        ok &= (tbin >= t0) & (tbin < t0 + block_t)
+        # clamp indices so non-contributing events still store in-block
+        # (weight 0) instead of faulting — predication by value, not
+        # by branch, keeps the loop body straight-line.
+        lt = jnp.clip(tbin - t0, 0, block_t - 1)
+        xs = jnp.clip(xi, 0, width - 1)
+        ys = jnp.clip(yi, 0, height - 1)
+        ps = jnp.clip(pi, 0, 1)
+        o_ref[0, lt, ys, xs, ps] += ok.astype(jnp.float32)
+        return 0
+
+    jax.lax.fori_loop(0, n_events, body, 0)
+
+    if mode == "binary":
+        o_ref[...] = (o_ref[...] > 0).astype(jnp.float32)
+    elif mode == "signed":
+        cnt = o_ref[...]
+        net = cnt[..., 1] - cnt[..., 0]
+        tot = cnt[..., 1] + cnt[..., 0]
+        o_ref[...] = jnp.stack([net, tot], axis=-1)
+
+
+def event_voxel_pallas(t, x, y, p, valid, *, time_steps: int, height: int,
+                       width: int, window: float = 1.0,
+                       mode: str = "binary", oob: str = "clip",
+                       block_t: int = 0, interpret: bool = True):
+    """Batched event buffers -> voxel grids [B, T, H, W, 2].
+
+    ``t``: [B, N] float32; ``x``/``y``/``p``/``valid``: [B, N] int32
+    (``valid`` nonzero = live event).  ``block_t`` = time-bins per VMEM
+    slab (0 picks ``min(T, 8)``).
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if oob not in OOB_POLICIES:
+        raise ValueError(f"oob must be one of {OOB_POLICIES}, got {oob!r}")
+    B, N = t.shape
+    bt = block_t or min(time_steps, 8)
+    bt = min(bt, time_steps)
+    ev_spec = pl.BlockSpec((1, N), lambda b, i: (b, 0))
+    return pl.pallas_call(
+        functools.partial(_voxel_kernel, n_events=N, block_t=bt,
+                          time_steps=time_steps, height=height, width=width,
+                          window=window, mode=mode, oob=oob),
+        grid=(B, pl.cdiv(time_steps, bt)),
+        in_specs=[ev_spec] * 5,
+        out_specs=pl.BlockSpec((1, bt, height, width, 2),
+                               lambda b, i: (b, i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, time_steps, height, width, 2),
+                                       jnp.float32),
+        interpret=interpret,
+    )(t, x, y, p, valid)

@@ -16,12 +16,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.demosaic import demosaic_pallas
+from repro.kernels.event_voxel import event_voxel_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lif_scan import lif_scan_pallas
 from repro.kernels.nlm import nlm_pallas
 from repro.kernels.spike_matmul import spike_matmul_pallas
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "time_steps", "height", "width", "window", "mode", "oob", "block_t"))
+def event_voxel_op(events, *, time_steps: int, height: int, width: int,
+                   window: float = 1.0, mode: str = "binary",
+                   oob: str = "clip", block_t: int = 0):
+    """Batched EventStream ([B, N] leaves) -> voxel grids [B, T, H, W, 2],
+    kernel-backed (the ingestion hot path).  Bit-identical to the jnp
+    reference ``repro.core.encoding.events_to_voxel_batch``."""
+    return event_voxel_pallas(
+        events.t.astype(jnp.float32), events.x.astype(jnp.int32),
+        events.y.astype(jnp.int32), events.p.astype(jnp.int32),
+        events.valid.astype(jnp.int32), time_steps=time_steps,
+        height=height, width=width, window=window, mode=mode, oob=oob,
+        block_t=block_t, interpret=INTERPRET)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "v_reset"))

@@ -4,6 +4,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.encoding import events_to_voxel_batch as _voxel_jnp
 from repro.core.lif import lif_scan as _lif_scan_jnp
 from repro.isp.demosaic import demosaic_mhc as _demosaic_jnp
 from repro.isp.nlm import nlm_denoise as _nlm_jnp
@@ -11,6 +12,13 @@ from repro.isp.nlm import nlm_denoise as _nlm_jnp
 
 def lif_scan_ref(currents, *, tau=2.0, v_th=1.0, v_reset=0.0):
     return _lif_scan_jnp(currents, tau=tau, v_th=v_th, v_reset=v_reset)
+
+
+def event_voxel_ref(events, *, time_steps, height, width, window=1.0,
+                    mode="binary", oob="clip"):
+    """Batched EventStream ([B, N] leaves) -> [B, T, H, W, 2]."""
+    return _voxel_jnp(events, time_steps=time_steps, height=height,
+                      width=width, window=window, mode=mode, oob=oob)
 
 
 def spike_matmul_ref(x, w):

@@ -1,20 +1,34 @@
 """Streaming engine for the cognitive perception loop: slot-based
-batching of ``npu_forward -> control -> ISP`` (paper §VI as a servable
-workload, mirroring ``ServeEngine``'s design).
+batching of ``encode -> npu_forward -> control -> ISP`` (paper §VI as a
+servable workload, mirroring ``ServeEngine``'s design).
 
 A fixed pool of ``batch`` slots shares ONE jit-compiled step executable
-(static shapes — TPU-friendly).  Clients ``submit`` perception requests
-(one DVS voxel window + one Bayer frame); every ``tick`` runs the whole
-active batch through the NPU and the registry-built ISP pipeline, hands
-back finished requests, and recycles their slots.  Unlike the LM engine
-there is no autoregressive tail: a perception request completes in a
-single tick, so throughput is ``batch`` frames per executable launch and
-the slot machinery exists to keep the batch full under ragged arrival.
+(static shapes — TPU-friendly).  Clients submit perception requests —
+either a finished DVS voxel window (``submit``) or a RAW event buffer
+(``submit_events``, paper §IV-A: the event->spike half of the loop) —
+plus one Bayer frame; every ``tick`` voxelizes the event slots, runs the
+whole active batch through the NPU and the registry-built ISP pipeline,
+hands back finished requests, and recycles their slots.  Unlike the LM
+engine there is no autoregressive tail: a perception request completes
+in a single tick, so throughput is ``batch`` frames per executable
+launch and the slot machinery exists to keep the batch full under
+ragged arrival.
+
+The event path is part of the SAME tick executable: per-slot event
+FIFOs (bounded at ``enc_cfg.event_capacity``, overfull windows budgeted
+earliest-first on admission) ride along as static-shape inputs, the
+encode stage voxelizes all of them every tick, and a per-slot flag
+selects encoded-vs-submitted voxels.  Mixing ``submit`` and
+``submit_events`` in one batch therefore costs no retrace — the flag is
+a traced value, exactly the FPGA datapath discipline of one wired
+circuit serving every mux setting.
 
 The ISP stage ordering/backend comes from an ``ISPConfig``; the NPU
 control vector is auto-mapped onto the declared stage parameter ranges,
 so swapping in a reordered or extended pipeline (e.g. the "hdr" config)
-is a constructor argument, not a code change.
+is a constructor argument, not a code change.  Likewise the ingestion
+policy (voxel mode, boundary-timestamp handling, FIFO depth, jnp vs
+Pallas voxelizer) is an ``EncodingConfig``.
 """
 from __future__ import annotations
 
@@ -24,7 +38,9 @@ from typing import Any, Dict, List, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ISPConfig, SNNConfig
+from repro.configs.base import EncodingConfig, ISPConfig, SNNConfig
+from repro.core.encoding import (EventStream, events_to_voxel_batch,
+                                 fit_stream)
 from repro.core.npu import npu_forward
 from repro.isp.pipeline import (control_vector_pipeline,
                                 legacy_control_permutation)
@@ -41,8 +57,9 @@ class PerceptionResult(NamedTuple):
 @dataclasses.dataclass
 class PerceptionRequest:
     rid: int
-    voxels: jnp.ndarray          # [T, Hd, Wd, 2] DVS voxel window
-    bayer: jnp.ndarray           # [H, W] RGGB mosaic in [0, 1]
+    voxels: Optional[jnp.ndarray] = None   # [T, Hd, Wd, 2] DVS voxel window
+    bayer: Optional[jnp.ndarray] = None    # [H, W] RGGB mosaic in [0, 1]
+    events: Optional[EventStream] = None   # raw [N]-leaf event buffer
     result: Optional[PerceptionResult] = None
 
 
@@ -52,7 +69,8 @@ class CognitiveEngine:
     def __init__(self, npu_params, cfg: SNNConfig,
                  isp_cfg: Optional[ISPConfig] = None, batch: int = 4,
                  frame_hw: Optional[tuple] = None,
-                 control_order: str = "pipeline"):
+                 control_order: str = "pipeline",
+                 enc_cfg: Optional[EncodingConfig] = None):
         """``control_order``: how the NPU head's slots are laid out.
         "pipeline" (default) is the registry's derived stage order;
         "legacy" serves heads trained through the ``cognitive_step`` /
@@ -61,12 +79,16 @@ class CognitiveEngine:
         self.params = npu_params
         self.cfg = cfg
         self.isp_cfg = isp_cfg if isp_cfg is not None else ISPConfig()
+        self.enc_cfg = enc_cfg if enc_cfg is not None else EncodingConfig()
         need = self.isp_cfg.control_dim
         if cfg.control_dim < need:
             raise ValueError(
                 f"NPU control_dim={cfg.control_dim} < {need} needed by ISP "
                 f"pipeline {self.isp_cfg.name!r}; build the SNNConfig with "
                 f"repro.core.npu.configure_for_isp")
+        if self.enc_cfg.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown encoding backend "
+                             f"{self.enc_cfg.backend!r}")
         self.batch = batch
         H, W = frame_hw if frame_hw is not None else (cfg.height, cfg.width)
         # static slot buffers: inactive slots carry zeros and ride along
@@ -75,6 +97,14 @@ class CognitiveEngine:
             (cfg.time_steps, batch, cfg.height, cfg.width, cfg.in_channels),
             jnp.float32)
         self.bayer = jnp.zeros((batch, H, W), jnp.float32)
+        cap = self.enc_cfg.event_capacity
+        self.events = EventStream(
+            t=jnp.zeros((batch, cap), jnp.float32),
+            x=jnp.zeros((batch, cap), jnp.int32),
+            y=jnp.zeros((batch, cap), jnp.int32),
+            p=jnp.zeros((batch, cap), jnp.int32),
+            valid=jnp.zeros((batch, cap), bool))
+        self.from_events = jnp.zeros((batch,), bool)
         self.active: List[Optional[PerceptionRequest]] = [None] * batch
         self.ticks = 0
 
@@ -93,9 +123,30 @@ class CognitiveEngine:
                     f"NPU control_dim={cfg.control_dim} too narrow for "
                     f"the legacy slot layout (needs > {max(p)})")
             perm = jnp.asarray(p, jnp.int32)
-        icfg, ncfg, nd = self.isp_cfg, cfg, need
+        icfg, ncfg, ecfg, nd = self.isp_cfg, cfg, self.enc_cfg, need
 
-        def _step(params, voxels, bayer):
+        def _encode(events):
+            if ecfg.backend == "pallas":
+                from repro.kernels.ops import event_voxel_op
+                vox = event_voxel_op(
+                    events, time_steps=ncfg.time_steps, height=ncfg.height,
+                    width=ncfg.width, window=ecfg.window, mode=ecfg.mode,
+                    oob=ecfg.oob)
+            else:
+                vox = events_to_voxel_batch(
+                    events, time_steps=ncfg.time_steps, height=ncfg.height,
+                    width=ncfg.width, window=ecfg.window, mode=ecfg.mode,
+                    oob=ecfg.oob)
+            return jnp.moveaxis(vox, 0, 1)            # -> [T, B, H, W, 2]
+
+        def _step(params, voxels, bayer, events, from_events):
+            # encode stage: voxelize the event slots inside the same
+            # executable (slots submitted as voxels keep their buffer);
+            # traced out entirely for non-DVS channel layouts
+            if ncfg.in_channels == 2:
+                enc = _encode(events)
+                voxels = jnp.where(from_events[None, :, None, None, None],
+                                   enc, voxels)
             out = npu_forward(params, voxels, ncfg)
             ctrl = out.control[:, perm] if perm is not None \
                 else out.control[:, :nd]
@@ -105,8 +156,9 @@ class CognitiveEngine:
                 lambda c: control_to_stage_params(c, icfg.stages))(ctrl)
             return out, rgb, sp
 
-        # one executable serves every tick / control setting (the FPGA
-        # runtime-reconfigurability analogue, same as ServeEngine._decode)
+        # one executable serves every tick / control setting / ingestion
+        # mix (the FPGA runtime-reconfigurability analogue, same as
+        # ServeEngine._decode)
         self._step = jax.jit(_step)
 
     # ------------------------------------------------------------------
@@ -117,7 +169,16 @@ class CognitiveEngine:
         return None
 
     def submit(self, req: PerceptionRequest) -> bool:
-        """Stage a request into a free slot. False if the engine is full."""
+        """Stage a voxel-carrying request into a free slot.  False if
+        the engine is full.  Requests carrying raw events (and no
+        voxels) route through ``submit_events``."""
+        if req.voxels is None:
+            if req.events is None:
+                raise ValueError(f"request {req.rid}: neither voxels nor "
+                                 f"events")
+            return self.submit_events(req)
+        if req.bayer is None:
+            raise ValueError(f"request {req.rid} carries no bayer frame")
         slot = self._free_slot()
         if slot is None:
             return False
@@ -125,6 +186,38 @@ class CognitiveEngine:
             jnp.asarray(req.voxels, jnp.float32))
         self.bayer = self.bayer.at[slot].set(
             jnp.asarray(req.bayer, jnp.float32))
+        self.from_events = self.from_events.at[slot].set(False)
+        self.active[slot] = req
+        return True
+
+    def submit_events(self, req: PerceptionRequest) -> bool:
+        """Stage a RAW event buffer into a free slot; the voxelization
+        happens inside the next tick's executable (paper §IV-A).  The
+        buffer is coerced to the engine's bounded per-slot FIFO:
+        under-full windows are validity-padded, overfull ones budgeted
+        to the ``enc_cfg.event_capacity`` earliest events.  False if
+        the engine is full."""
+        if req.events is None:
+            raise ValueError(f"request {req.rid} carries no events")
+        if req.bayer is None:
+            raise ValueError(f"request {req.rid} carries no bayer frame")
+        if self.cfg.in_channels != 2:
+            raise ValueError("event ingestion needs in_channels=2 "
+                             "(DVS polarity channels)")
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        ev = fit_stream(req.events, self.enc_cfg.event_capacity)
+        self.events = EventStream(
+            t=self.events.t.at[slot].set(jnp.asarray(ev.t, jnp.float32)),
+            x=self.events.x.at[slot].set(jnp.asarray(ev.x, jnp.int32)),
+            y=self.events.y.at[slot].set(jnp.asarray(ev.y, jnp.int32)),
+            p=self.events.p.at[slot].set(jnp.asarray(ev.p, jnp.int32)),
+            valid=self.events.valid.at[slot].set(
+                jnp.asarray(ev.valid, bool)))
+        self.bayer = self.bayer.at[slot].set(
+            jnp.asarray(req.bayer, jnp.float32))
+        self.from_events = self.from_events.at[slot].set(True)
         self.active[slot] = req
         return True
 
@@ -135,7 +228,8 @@ class CognitiveEngine:
         and recycles their slots."""
         if not any(r is not None for r in self.active):
             return []
-        out, rgb, sp = self._step(self.params, self.voxels, self.bayer)
+        out, rgb, sp = self._step(self.params, self.voxels, self.bayer,
+                                  self.events, self.from_events)
         self.ticks += 1
         finished: List[PerceptionRequest] = []
         for i, r in enumerate(self.active):

@@ -1,18 +1,19 @@
 """CognitiveEngine streaming tests: submit/tick lifecycle, slot
-recycling, single-executable caching, and reconfigured pipelines
+recycling, single-executable caching, reconfigured pipelines
 end-to-end (acceptance: reordered/extra-stage pipeline through the
-engine)."""
+engine), and the raw-event ingestion path (submit_events with the
+encode stage folded into the one jit-cached tick executable)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ISPConfig
+from repro.configs import EncodingConfig, ISPConfig
 from repro.configs.registry import get_isp_config, reduced_snn
 from repro.core.cognitive import cognitive_forward, cognitive_step
 from repro.core.encoding import voxel_batch
 from repro.core.npu import configure_for_isp, init_npu
-from repro.data.synthetic import make_scene_batch
+from repro.data.synthetic import make_scenario, make_scene_batch
 from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
 
 
@@ -23,14 +24,25 @@ def setup():
     return cfg, params
 
 
+def _scene(cfg, n, seed=0, n_events=2048):
+    return make_scene_batch(jax.random.PRNGKey(seed), batch=n,
+                            height=cfg.height, width=cfg.width,
+                            time_steps=cfg.time_steps, n_events=n_events)
+
+
 def _requests(cfg, n, seed=0):
-    scene = make_scene_batch(jax.random.PRNGKey(seed), batch=n,
-                             height=cfg.height, width=cfg.width,
-                             time_steps=cfg.time_steps)
+    scene = _scene(cfg, n, seed)
     vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
                       height=cfg.height, width=cfg.width)
     return [PerceptionRequest(rid=i, voxels=vox[:, i], bayer=scene.bayer[i])
             for i in range(n)]
+
+
+def _event_requests(cfg, n, seed=0, n_events=2048):
+    scene = _scene(cfg, n, seed, n_events=n_events)
+    return [PerceptionRequest(
+        rid=i, events=jax.tree_util.tree_map(lambda a: a[i], scene.events),
+        bayer=scene.bayer[i]) for i in range(n)]
 
 
 def test_submit_tick_smoke(setup):
@@ -138,6 +150,129 @@ def test_engine_rejects_undersized_control_head(setup):
     cfg, params = setup                    # control_dim=8 < hdr's 10
     with pytest.raises(ValueError, match="configure_for_isp"):
         CognitiveEngine(params, cfg, get_isp_config("hdr"), batch=2)
+
+
+# ---------------------------------------------------------------------------
+# Event-driven ingestion path (paper §IV-A through the engine)
+# ---------------------------------------------------------------------------
+
+def test_submit_events_roundtrips_to_result(setup):
+    """Acceptance: a raw event buffer round-trips to a PerceptionResult
+    through the tick executable, and matches the precomputed-voxel path
+    bit-for-bit (the encode stage is the same jnp reference)."""
+    cfg, params = setup
+    scene = _scene(cfg, 2, seed=21)
+    vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                      height=cfg.height, width=cfg.width)
+    eng = CognitiveEngine(params, cfg, batch=2)
+    rv = PerceptionRequest(rid=0, voxels=vox[:, 0], bayer=scene.bayer[0])
+    re = PerceptionRequest(
+        rid=1, events=jax.tree_util.tree_map(lambda a: a[0], scene.events),
+        bayer=scene.bayer[0])
+    assert eng.submit(rv) and eng.submit_events(re)
+    done = {r.rid: r for r in eng.tick()}
+    assert set(done) == {0, 1}
+    assert re.result.rgb.shape == (cfg.height, cfg.width, 3)
+    np.testing.assert_array_equal(np.asarray(done[0].result.rgb),
+                                  np.asarray(done[1].result.rgb))
+    np.testing.assert_array_equal(np.asarray(done[0].result.control),
+                                  np.asarray(done[1].result.control))
+
+
+def test_submit_events_ragged_arrival_and_exhaustion(setup):
+    """Ragged event-request arrival: pool exhaustion rejects, recycled
+    slots re-admit, every request completes, ONE executable serves all
+    ticks (no retrace across voxel/event mixes)."""
+    cfg, params = setup
+    eng = CognitiveEngine(params, cfg, batch=2)
+    evs = _event_requests(cfg, 3, seed=4)
+    assert eng.submit_events(evs[0]) and eng.submit_events(evs[1])
+    assert not eng.submit_events(evs[2])       # pool exhausted
+    assert len(eng.tick()) == 2
+    assert eng.submit_events(evs[2])           # slot recycled
+    vox_reqs = _requests(cfg, 1, seed=5)
+    assert eng.submit(vox_reqs[0])             # mixed second tick
+    done = eng.tick()
+    assert {r.rid for r in done} == {2, 0}
+    for r in done:
+        assert np.isfinite(np.asarray(r.result.rgb)).all()
+    assert eng.ticks == 2
+    assert eng._step._cache_size() == 1        # one executable, all mixes
+
+
+def test_submit_routes_event_only_requests(setup):
+    """submit() on a request carrying only events goes through the
+    event path; carrying neither payload is an error."""
+    cfg, params = setup
+    eng = CognitiveEngine(params, cfg, batch=2)
+    req = _event_requests(cfg, 1, seed=6)[0]
+    assert eng.submit(req)
+    assert bool(eng.from_events[0])
+    with pytest.raises(ValueError, match="neither voxels nor events"):
+        eng.submit(PerceptionRequest(rid=9, bayer=jnp.zeros(
+            (cfg.height, cfg.width))))
+    with pytest.raises(ValueError, match="no events"):
+        eng.submit_events(PerceptionRequest(rid=9, bayer=jnp.zeros(
+            (cfg.height, cfg.width))))
+
+
+def test_submit_events_budgets_overfull_window(setup):
+    """A window beyond the engine's FIFO capacity is budgeted down on
+    admission (earliest-first), not rejected and not shape-exploded."""
+    cfg, params = setup
+    enc = EncodingConfig(event_capacity=256)
+    eng = CognitiveEngine(params, cfg, batch=2, enc_cfg=enc)
+    storm = make_scenario("noise_burst", jax.random.PRNGKey(7),
+                          height=cfg.height, width=cfg.width, n_events=4096)
+    bayer = _scene(cfg, 1, seed=7).bayer[0]
+    assert eng.submit_events(PerceptionRequest(rid=0, events=storm,
+                                               bayer=bayer))
+    assert eng.events.t.shape == (2, 256)      # static slot FIFO intact
+    assert int(eng.events.num_events()[0]) == 256
+    # budget kept the EARLIEST 256 events
+    kept_latest = float(jnp.max(jnp.where(eng.events.valid[0],
+                                          eng.events.t[0], -jnp.inf)))
+    all_sorted = jnp.sort(jnp.where(storm.valid, storm.t, jnp.inf))
+    assert kept_latest <= float(all_sorted[255]) + 1e-9
+    (done,) = eng.tick()
+    assert np.isfinite(np.asarray(done.result.rgb)).all()
+
+
+def test_event_path_pallas_backend_matches_jnp(setup):
+    """The engine's encode stage dispatches to the Pallas voxelizer and
+    produces bit-identical results to the jnp backend."""
+    cfg, params = setup
+    req_j = _event_requests(cfg, 1, seed=8, n_events=512)[0]
+    req_p = _event_requests(cfg, 1, seed=8, n_events=512)[0]
+    enc_j = EncodingConfig(event_capacity=512)
+    enc_p = EncodingConfig(event_capacity=512, backend="pallas")
+    eng_j = CognitiveEngine(params, cfg, batch=1, enc_cfg=enc_j)
+    eng_p = CognitiveEngine(params, cfg, batch=1, enc_cfg=enc_p)
+    assert eng_j.submit_events(req_j) and eng_p.submit_events(req_p)
+    (dj,), (dp,) = eng_j.tick(), eng_p.tick()
+    np.testing.assert_array_equal(np.asarray(dj.result.rgb),
+                                  np.asarray(dp.result.rgb))
+    with pytest.raises(ValueError, match="backend"):
+        CognitiveEngine(params, cfg, batch=1,
+                        enc_cfg=EncodingConfig(backend="typo"))
+
+
+def test_event_path_scenarios_through_engine(setup):
+    """Every DVS scenario generator streams through submit_events; the
+    oob='drop' strict policy also serves (still one executable each)."""
+    from repro.data.synthetic import SCENARIOS
+    cfg, params = setup
+    enc = EncodingConfig(mode="count", oob="drop", event_capacity=512)
+    eng = CognitiveEngine(params, cfg, batch=2, enc_cfg=enc)
+    bayer = _scene(cfg, 1, seed=9).bayer[0]
+    for i, name in enumerate(SCENARIOS):
+        ev = make_scenario(name, jax.random.PRNGKey(i), height=cfg.height,
+                           width=cfg.width, n_events=512)
+        assert eng.submit_events(PerceptionRequest(rid=i, events=ev,
+                                                   bayer=bayer))
+        (done,) = eng.tick()
+        assert np.isfinite(np.asarray(done.result.rgb)).all()
+    assert eng._step._cache_size() == 1
 
 
 def test_cognitive_step_shim_still_works(setup):

@@ -10,6 +10,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import smoke_reps
 from repro.configs.registry import SNN_ARCHS, reduced_snn
 from repro.core.encoding import voxel_batch
 from repro.core.npu import init_npu, npu_forward
@@ -52,15 +53,17 @@ def _eval(params, cfg, n_batches=3):
 def run(emit):
     opt = AdamWConfig(lr=2e-3, weight_decay=1e-4)
     results = {}
+    steps = smoke_reps(STEPS, 2)       # --smoke: health check, not AP
     for name in SNN_ARCHS:
         cfg = reduced_snn(name)
         state = init_snn_state(init_npu(jax.random.PRNGKey(0), cfg), opt)
         step = jax.jit(make_snn_train_step(cfg, opt))
         t0 = time.perf_counter()
-        for i in range(STEPS):
+        for i in range(steps):
             state, m = step(state, _scenes(i, cfg))
-        t_train = (time.perf_counter() - t0) / STEPS * 1e6
-        ap, sparsity, tile_skip = _eval(state.params, cfg)
+        t_train = (time.perf_counter() - t0) / steps * 1e6
+        ap, sparsity, tile_skip = _eval(state.params, cfg,
+                                        n_batches=smoke_reps(3, 1))
         results[name] = (ap, sparsity)
         emit(f"backbone_{name}_ap", t_train, f"{ap:.4f}")
         emit(f"backbone_{name}_sparsity", t_train, f"{sparsity:.4f}")

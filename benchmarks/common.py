@@ -1,0 +1,36 @@
+"""Shared benchmark plumbing: the wall-time helper every bench module
+uses, and the smoke switch the CI lane flips.
+
+``REPRO_BENCH_SMOKE=1`` (set by ``benchmarks/run.py --smoke``) forces
+every timed region to a single repetition and shrinks iteration counts
+(e.g. the backbone training loops) so the whole suite runs once as a
+schema/health check rather than a measurement.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+
+def is_smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE", "0") == "1"
+
+
+def smoke_reps(reps: int, smoke_value: int = 1) -> int:
+    """Collapse a repetition/iteration count under --smoke."""
+    return smoke_value if is_smoke() else reps
+
+
+def time_us(fn, *args, reps: int = 5) -> float:
+    """Mean wall-time per call in microseconds (first call warms the
+    jit cache and is excluded)."""
+    fn(*args)
+    reps = smoke_reps(reps)
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6

@@ -3,12 +3,11 @@ wall-time per stage + full pipeline at 128x128, jnp vs Pallas kernels.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import time_us as _time
 from repro.configs.registry import get_isp_config
 from repro.isp.awb import apply_wb, awb_gains
 from repro.isp.demosaic import demosaic_mhc
@@ -19,15 +18,6 @@ from repro.isp.pipeline import default_params, isp_pipeline, run_pipeline
 from repro.isp.tone import apply_saturation, reinhard_tonemap
 
 H = W = 128
-
-
-def _time(fn, *args, reps=5):
-    fn(*args)                       # compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
 
 
 def run(emit):

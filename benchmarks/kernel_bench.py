@@ -4,23 +4,17 @@ plus the jnp-reference timings the kernels are validated against.
 """
 from __future__ import annotations
 
-import time
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import time_us
 from repro.kernels import ref
 from repro.kernels.spike_matmul import spike_matmul_pallas
 
-
-def _time(fn, *args, reps=3):
-    fn(*args)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+_time = functools.partial(time_us, reps=3)
 
 
 def run(emit):

@@ -2,17 +2,25 @@
 and voxelizer backends, LIF scan, end-to-end spiking inference latency,
 the engine's raw-event ingestion path, and spike-sparsity / tile-skip
 rates that drive the event-driven compute saving.
+
+The backend sweep times every hot-path layer kind (LIF scan, spiking
+dense matmul), every backbone, and the engine submit->result tick under
+both ``SNNConfig.backend`` settings.  On this CPU container the pallas
+rows run in interpret mode, so they are correctness/roofline anchors,
+not speed claims — flip REPRO_PALLAS_COMPILE=1 on TPU for real numbers.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks.common import smoke_reps, time_us
 from repro.configs.base import EncodingConfig
-from repro.configs.registry import reduced_snn
+from repro.configs.registry import SNN_ARCHS, reduced_snn
 from repro.core.encoding import events_to_voxel_batch, voxel_batch
 from repro.core.lif import lif_scan
 from repro.core.npu import init_npu, npu_forward
@@ -21,13 +29,68 @@ from repro.data.synthetic import (SCENARIOS, make_scenario_batch,
 from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
 
 
-def _time(fn, *args, reps=5):
-    fn(*args)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+def _backend_sweep(emit, rng):
+    """jnp vs pallas per layer kind, per backbone, and engine tick."""
+    from repro.kernels.ops import lif_scan_op, spike_matmul_op
+
+    # layer kind: LIF scan (the recurrence epilogue)
+    T, N = 5, 16384
+    cur = jnp.asarray(rng.normal(0.5, 1, (T, N)).astype(np.float32))
+    t_j = time_us(jax.jit(lambda c: lif_scan(c)), cur)
+    emit(f"lif_T{T}_N{N}_jnp", t_j, f"{cur.size / t_j:.0f}Mns_s")
+    t_p = time_us(lif_scan_op, cur, reps=2)
+    emit(f"lif_T{T}_N{N}_pallas", t_p, f"{cur.size / t_p:.0f}Mns_s")
+
+    # layer kind: spiking dense matmul on 0/1 activations (tile skip)
+    M, K, Nw = 256, 256, 256
+    x = jnp.asarray((rng.random((M, K)) < 0.1).astype(np.float32))
+    w = jnp.asarray(rng.normal(0, 1, (K, Nw)).astype(np.float32))
+    t_j = time_us(jax.jit(lambda x, w: x @ w), x, w)
+    emit(f"dense_{M}x{K}x{Nw}_jnp", t_j, "d0.1")
+    t_p = time_us(spike_matmul_op, x, w, reps=2)
+    emit(f"dense_{M}x{K}x{Nw}_pallas", t_p, "d0.1_tile_skip")
+
+    # per backbone: full npu_forward under both backends
+    for name in SNN_ARCHS:
+        for backend in ("jnp", "pallas"):
+            cfg = reduced_snn(name, backend=backend)
+            params = init_npu(jax.random.PRNGKey(1), cfg)
+            vox = jnp.asarray(
+                (rng.random((cfg.time_steps, 2, cfg.height, cfg.width,
+                             cfg.in_channels)) < 0.1).astype(np.float32))
+            fwd = jax.jit(lambda p, v, c=cfg: npu_forward(p, v, c))
+            t = time_us(fwd, params, vox, reps=2)
+            emit(f"npu_fwd_{name}_{backend}", t, "batch2")
+
+
+def _engine_tick_sweep(emit, rng):
+    """Engine submit->result latency (voxel path) per NPU backend: the
+    zero-copy tick — staged numpy slots, one device_put, one fetch."""
+    for backend in ("jnp", "pallas"):
+        cfg = reduced_snn("spiking_yolo", backend=backend)
+        params = init_npu(jax.random.PRNGKey(1), cfg)
+        scene = make_scene_batch(jax.random.PRNGKey(3), batch=4,
+                                 height=cfg.height, width=cfg.width,
+                                 time_steps=cfg.time_steps)
+        vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                          height=cfg.height, width=cfg.width)
+        eng = CognitiveEngine(params, cfg, batch=4)
+
+        def _drive():
+            for i in range(4):
+                eng.submit(PerceptionRequest(rid=i, voxels=vox[:, i],
+                                             bayer=scene.bayer[i]))
+            return eng.tick()
+
+        _drive()                               # warm the tick executable
+        reps = smoke_reps(5)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            done = _drive()
+        jax.block_until_ready(done[-1].result.rgb)
+        t_us = (time.perf_counter() - t0) / reps * 1e6
+        emit(f"engine_tick_{backend}", t_us,
+             f"{4e6 / t_us:.1f}req_s")         # 4 requests per tick
 
 
 def run(emit):
@@ -40,18 +103,18 @@ def run(emit):
     enc = jax.jit(lambda ev: voxel_batch(ev, time_steps=cfg.time_steps,
                                          height=cfg.height,
                                          width=cfg.width))
-    t_enc = _time(enc, scene.events)
+    t_enc = time_us(enc, scene.events)
     n_events = int(np.prod(scene.events.x.shape))
     emit("npu_event_encoding", t_enc, f"{n_events / t_enc:.1f}Mev_s")
 
     cur = jnp.asarray(rng.normal(0.5, 1, (8, 65536)).astype(np.float32))
-    t_lif = _time(jax.jit(lambda c: lif_scan(c)), cur)
+    t_lif = time_us(jax.jit(lambda c: lif_scan(c)), cur)
     emit("npu_lif_scan_jnp", t_lif, f"{cur.size / t_lif:.0f}Mneuron_steps_s")
 
     params = init_npu(jax.random.PRNGKey(1), cfg)
     vox = enc(scene.events)
     fwd = jax.jit(lambda p, v: npu_forward(p, v, cfg))
-    t_fwd = _time(fwd, params, vox)
+    t_fwd = time_us(fwd, params, vox)
     out = fwd(params, vox)
     emit("npu_inference", t_fwd, f"batch8_{cfg.height}x{cfg.width}")
     emit("npu_sparsity", t_fwd, f"{float(out.sparsity):.4f}")
@@ -60,6 +123,10 @@ def run(emit):
     # event-driven saving estimate: dense MACs vs spike-driven MACs
     voxel_rate = float(jnp.mean(vox > 0))
     emit("npu_input_event_rate", 0.0, f"{voxel_rate:.4f}")
+
+    # backend sweep: jnp vs pallas per layer kind / backbone / engine
+    _backend_sweep(emit, rng)
+    _engine_tick_sweep(emit, rng)
 
     # ingestion sweep: events/sec per DVS scenario x voxelizer backend
     # (jnp scatter vs the Pallas event_voxel kernel; interpret mode on
@@ -73,7 +140,7 @@ def run(emit):
                                   height=cfg.height, width=cfg.width,
                                   n_events=N)
         live = int(np.sum(np.asarray(evs.valid)))
-        t_us = _time(enc_jnp, evs)
+        t_us = time_us(enc_jnp, evs)
         emit(f"event_voxel_{name}_jnp", t_us, f"{live / t_us:.2f}Mev_s")
     from repro.kernels.ops import event_voxel_op
     enc_plls = jax.jit(lambda ev: event_voxel_op(
@@ -81,7 +148,7 @@ def run(emit):
     evs = make_scenario_batch("moving_bar", jax.random.PRNGKey(2), B,
                               height=cfg.height, width=cfg.width, n_events=N)
     live = int(np.sum(np.asarray(evs.valid)))
-    t_us = _time(enc_plls, evs, reps=2)
+    t_us = time_us(enc_plls, evs, reps=2)
     emit("event_voxel_moving_bar_pallas", t_us, f"{live / t_us:.2f}Mev_s")
 
     # engine raw-event path: submit_events -> encode -> NPU -> ISP
@@ -89,15 +156,17 @@ def run(emit):
                           enc_cfg=EncodingConfig(event_capacity=N))
     bayer = make_scene_batch(jax.random.PRNGKey(3), batch=4,
                              height=cfg.height, width=cfg.width).bayer
+
     def _drive():
         for i in range(4):
             eng.submit_events(PerceptionRequest(
                 rid=i, events=jax.tree_util.tree_map(lambda a: a[i], evs),
                 bayer=bayer[i]))
         return eng.tick()
+
     _drive()                                   # warm the tick executable
+    reps = smoke_reps(5)
     t0 = time.perf_counter()
-    reps = 5
     for _ in range(reps):
         done = _drive()
     jax.block_until_ready(done[-1].result.rgb)

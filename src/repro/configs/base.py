@@ -258,6 +258,12 @@ class SNNConfig:
     surrogate_beta: float = 4.0
     detect: bool = True             # detection head vs classification head
     num_anchors: int = 2
+    # Which implementation the spiking layers dispatch through: "jnp"
+    # (pure-XLA reference) or "pallas" (kernel-backed NPU hot path:
+    # fused norm+LIF epilogue, tile-skip spike matmul — bit-exact
+    # forward, surrogate-gradient custom VJP for BPTT).  All four
+    # backbones pick the switch up through apply_spiking_conv/_dense.
+    backend: str = "jnp"            # "jnp" | "pallas"
     # Cognitive control vector size. 8 matches the default ISP pipeline;
     # derive it from a stage ordering with ISPConfig.control_dim (see
     # repro.core.npu.configure_for_isp) instead of hand-counting.

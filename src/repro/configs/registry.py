@@ -189,10 +189,12 @@ def get_snn_config(name: str) -> SNNConfig:
     return SNN_ARCHS[name]
 
 
-def reduced_snn(name: str) -> SNNConfig:
+def reduced_snn(name: str, backend: str = "jnp") -> SNNConfig:
+    """``backend`` selects the spiking-layer implementation ("jnp"
+    reference or the kernel-backed "pallas" hot path)."""
     return dataclasses.replace(
         SNN_ARCHS[name], base_channels=8, num_stages=2, time_steps=3,
-        height=32, width=32)
+        height=32, width=32, backend=backend)
 
 
 # ---------------------------------------------------------------------------

@@ -2,10 +2,20 @@
 
 Layout: activations are [T, B, H, W, C] (time-major; conv applied to the
 folded [T*B, H, W, C] batch so the MXU sees one big conv per layer).
-BatchNorm is replaced by a per-channel affine ("tdBN"-style static scale)
-— running statistics across T steps are a training-stability device from
-the GPU SNN literature; a static scale keeps the layer bijective for the
-hardware mapping and trains fine at these scales.
+BatchNorm is replaced by a per-channel instance norm + affine
+("tdBN"-style) — running statistics across T steps are a training-
+stability device from the GPU SNN literature; without it deep spiking
+stacks are silent at init.
+
+Backend dispatch (``SNNConfig.backend``): the "jnp" path is the layered
+pure-XLA reference; "pallas" routes the hot epilogue through
+``repro.kernels.ops`` — the fused norm+affine+LIF kernel after convs,
+the VMEM-resident LIF scan after dense layers, and the tile-skip spike
+matmul for dense layers whose inputs are spike tensors.  Forward is
+bit-exact across backends (the jnp path deliberately reduces its norm
+statistics in the same [T, B, HW, C] axis-(0, 2) formulation the kernel
+blocks use) and both are differentiable — the kernel ops carry
+surrogate-gradient custom VJPs.
 """
 from __future__ import annotations
 
@@ -16,6 +26,25 @@ import jax.numpy as jnp
 
 from repro.configs.base import SNNConfig
 from repro.core.lif import lif_scan
+
+BACKENDS = ("jnp", "pallas")
+
+
+def _check_backend(cfg: SNNConfig) -> bool:
+    """True when the kernel backend is selected; raises on typos."""
+    if cfg.backend not in BACKENDS:
+        raise ValueError(f"SNNConfig.backend must be one of {BACKENDS}, "
+                         f"got {cfg.backend!r}")
+    return cfg.backend == "pallas"
+
+
+def _fire(y, cfg: SNNConfig):
+    if _check_backend(cfg):
+        from repro.kernels.ops import lif_scan_op
+        return lif_scan_op(y, tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                           v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
+    return lif_scan(y, tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                    v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
 
 
 def conv_init(rng, shape, dtype=jnp.float32):
@@ -64,17 +93,28 @@ def apply_spiking_conv(p, x, cfg: SNNConfig, *, stride: int = 1,
     y = _conv2d(xf, p["w"], stride, depthwise, C)
     _, Ho, Wo, Co = y.shape
     y = jnp.swapaxes(y.reshape(B, T, Ho, Wo, Co), 0, 1)
+    if normalize and fire and _check_backend(cfg):
+        # the whole epilogue (stats + affine + T-step recurrence) in
+        # one VMEM-resident kernel pass
+        from repro.kernels.ops import norm_affine_lif_op
+        return norm_affine_lif_op(y, p["scale"], p["bias"],
+                                  tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                                  v_reset=cfg.v_reset,
+                                  beta=cfg.surrogate_beta)
     if normalize:
         # rsqrt(var + eps): jnp.std has a non-finite gradient at zero
-        # variance (silent channels on sparse spike inputs)
-        mu = jnp.mean(y, axis=(0, 2, 3), keepdims=True)
-        var = jnp.var(y, axis=(0, 2, 3), keepdims=True)
-        y = (y - mu) * jax.lax.rsqrt(var + 1e-6)
+        # variance (silent channels on sparse spike inputs).  Reduce on
+        # the [T, B, HW, C] view over axes (0, 2) — the same reduce
+        # shape the fused kernel's per-batch slabs see, which is what
+        # makes the backends bit-exact rather than merely allclose.
+        y4 = y.reshape(T, B, Ho * Wo, Co)
+        mu = jnp.mean(y4, axis=(0, 2), keepdims=True)
+        var = jnp.var(y4, axis=(0, 2), keepdims=True)
+        y = ((y4 - mu) * jax.lax.rsqrt(var + 1e-6)).reshape(y.shape)
     y = y * p["scale"] + p["bias"]
     if not fire:
         return y
-    return lif_scan(y, tau=cfg.tau_mem, v_th=cfg.v_threshold,
-                    v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
+    return _fire(y, cfg)
 
 
 def init_spiking_dense(rng, cin: int, cout: int):
@@ -82,13 +122,22 @@ def init_spiking_dense(rng, cin: int, cout: int):
             "bias": jnp.zeros((cout,))}
 
 
-def apply_spiking_dense(p, x, cfg: SNNConfig, *, fire: bool = True):
-    """x: [T, B, C]."""
-    y = x @ p["w"] + p["bias"]
+def apply_spiking_dense(p, x, cfg: SNNConfig, *, fire: bool = True,
+                        spike_input: bool = False):
+    """x: [T, B, C].  ``spike_input`` marks x as a 0/1 spike tensor
+    (i.e. the upstream layer fired), letting the pallas backend route
+    the matmul through the tile-skip ``spike_matmul_op`` — the MXU
+    granularity of the paper's silent-neurons-cost-nothing claim."""
+    if spike_input and _check_backend(cfg):
+        from repro.kernels.ops import spike_matmul_op
+        T, B, C = x.shape
+        y = spike_matmul_op(x.reshape(T * B, C), p["w"])
+        y = y.reshape(T, B, -1) + p["bias"]
+    else:
+        y = x @ p["w"] + p["bias"]
     if not fire:
         return y
-    return lif_scan(y, tau=cfg.tau_mem, v_th=cfg.v_threshold,
-                    v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
+    return _fire(y, cfg)
 
 
 def max_pool(x, window: int = 2):

@@ -68,7 +68,10 @@ def npu_forward(params, voxels, cfg: SNNConfig) -> NPUOutput:
     # cognitive control head: scene lighting/motion profile -> ISP params
     pooled = jnp.mean(feats, axis=(2, 3))              # [T,B,C]
     h = apply_spiking_dense(params["ctrl_hidden"], pooled, cfg)
-    ctrl = apply_spiking_dense(params["ctrl_out"], h, cfg, fire=False)
+    # h is a 0/1 spike tensor (ctrl_hidden fired), so the pallas
+    # backend routes this matmul through the tile-skip spike kernel
+    ctrl = apply_spiking_dense(params["ctrl_out"], h, cfg, fire=False,
+                               spike_input=True)
     ctrl = jax.nn.sigmoid(jnp.mean(ctrl, axis=0))      # [B, control_dim]
 
     return NPUOutput(raw_pred=raw, control=ctrl,

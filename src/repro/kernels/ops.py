@@ -5,7 +5,18 @@ REPRO_PALLAS_COMPILE=1 to lower natively via Mosaic).
 
 The ISP stage registry's "pallas" backend resolves to ``demosaic_op``
 and ``nlm_op`` here (lazily, from repro.isp.stages, so the pure-jnp
-path never imports Pallas).
+path never imports Pallas).  The SNN stack's "pallas" backend
+(``SNNConfig.backend``) resolves to ``norm_affine_lif_op`` /
+``lif_scan_op`` / ``spike_matmul_op`` from repro.core.layers.
+
+The spiking ops carry a ``jax.custom_vjp`` whose backward implements
+the sigmoid surrogate gradient (BPTT through the LIF recurrence, à la
+SpikingJelly), so the kernel-backed forward is legal under training:
+``jax.grad`` through a pallas-backend network matches ``jax.grad``
+through the jnp reference to float rounding.  Residuals are the raw
+inputs; intermediates (membrane trajectory, norm statistics) are
+rematerialised in the backward — the FlashAttention trade of recompute
+for HBM traffic.
 """
 from __future__ import annotations
 
@@ -18,11 +29,13 @@ import jax.numpy as jnp
 from repro.kernels.demosaic import demosaic_pallas
 from repro.kernels.event_voxel import event_voxel_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.lif_scan import lif_scan_pallas
+from repro.kernels.lif_scan import lif_scan_pallas, norm_affine_lif_pallas
 from repro.kernels.nlm import nlm_pallas
 from repro.kernels.spike_matmul import spike_matmul_pallas
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+NORM_EPS = 1e-6
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -41,20 +54,188 @@ def event_voxel_op(events, *, time_steps: int, height: int, width: int,
         block_t=block_t, interpret=INTERPRET)
 
 
-@functools.partial(jax.jit, static_argnames=("tau", "v_th", "v_reset"))
-def lif_scan_op(currents, tau: float = 2.0, v_th: float = 1.0,
-                v_reset: float = 0.0):
-    """currents: [T, ...] -> spikes, kernel-backed. Folds trailing dims."""
+# ---------------------------------------------------------------------------
+# Surrogate-gradient BPTT (shared by the LIF-carrying custom VJPs)
+# ---------------------------------------------------------------------------
+
+def _lif_replay(z, *, tau: float, v_th: float, v_reset: float):
+    """Re-run the LIF recurrence on currents z [T, ...], returning the
+    pre-threshold distances x_t = u_t - v_th and spikes s_t (the
+    residuals the surrogate backward needs)."""
+    decay = jnp.exp(-1.0 / tau).astype(z.dtype)
+
+    def fstep(u, z_t):
+        u = decay * (u - v_reset) + v_reset + z_t
+        x = u - v_th
+        s = (x >= 0).astype(z.dtype)
+        u = u * (1.0 - s) + v_reset * s
+        return u, (x, s)
+
+    u0 = jnp.full(z.shape[1:], v_reset, z.dtype)
+    _, (xs, ss) = jax.lax.scan(fstep, u0, z, unroll=z.shape[0])
+    return xs, ss
+
+
+def _lif_bwd_scan(g, xs, ss, *, tau: float, v_th: float, v_reset: float,
+                  beta: float):
+    """Reverse-time BPTT through the LIF recurrence with the sigmoid
+    surrogate H'(x) ≈ β·σ(βx)·(1-σ(βx)).  g: dL/d(spikes) [T, ...];
+    returns dL/d(currents) [T, ...].
+
+    The spike enters twice — as the output and in the hard reset
+    u⁺ = u·(1-s) + v_reset·s — so the adjoint is
+      du_t = du⁺·(1-s_t) + (g_t + du⁺·(v_reset - u_t))·σ'  ,
+    exactly what jax.grad derives through the reference's custom-vjp
+    ``spike``."""
+    decay = jnp.exp(-1.0 / tau).astype(g.dtype)
+
+    def bstep(du, inp):
+        g_t, x_t, s_t = inp
+        u_t = x_t + v_th
+        ds = g_t + du * (v_reset - u_t)
+        sig = jax.nn.sigmoid(beta * x_t)
+        dut = du * (1.0 - s_t) + ds * (beta * sig * (1.0 - sig))
+        return dut * decay, dut
+
+    du0 = jnp.zeros_like(g[0])
+    _, dz = jax.lax.scan(bstep, du0, (g, xs, ss), reverse=True,
+                         unroll=g.shape[0])
+    return dz
+
+
+# ---------------------------------------------------------------------------
+# lif_scan_op: kernel forward + surrogate BPTT backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _lif_scan(currents, tau, v_th, v_reset, beta):
     T = currents.shape[0]
-    flat = currents.reshape(T, -1)
-    out = lif_scan_pallas(flat, tau=tau, v_th=v_th, v_reset=v_reset,
-                          interpret=INTERPRET)
+    out = lif_scan_pallas(currents.reshape(T, -1), tau=tau, v_th=v_th,
+                          v_reset=v_reset, interpret=INTERPRET)
     return out.reshape(currents.shape)
+
+
+def _lif_scan_fwd(currents, tau, v_th, v_reset, beta):
+    return _lif_scan(currents, tau, v_th, v_reset, beta), currents
+
+
+def _lif_scan_bwd(tau, v_th, v_reset, beta, currents, g):
+    xs, ss = _lif_replay(currents, tau=tau, v_th=v_th, v_reset=v_reset)
+    dz = _lif_bwd_scan(g, xs, ss, tau=tau, v_th=v_th, v_reset=v_reset,
+                       beta=beta)
+    return (dz,)
+
+
+_lif_scan.defvjp(_lif_scan_fwd, _lif_scan_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "v_reset",
+                                             "beta"))
+def lif_scan_op(currents, tau: float = 2.0, v_th: float = 1.0,
+                v_reset: float = 0.0, beta: float = 4.0):
+    """currents: [T, ...] -> spikes, kernel-backed + differentiable
+    (surrogate BPTT backward).  Folds trailing dims for the kernel."""
+    return _lif_scan(currents, tau, v_th, v_reset, beta)
+
+
+# ---------------------------------------------------------------------------
+# norm_affine_lif_op: fused spiking-conv epilogue + analytic backward
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _norm_affine_lif(y, scale, bias, tau, v_th, v_reset, beta):
+    T, B = y.shape[:2]
+    C = y.shape[-1]
+    y4 = y.reshape(T, B, -1, C)
+    out = norm_affine_lif_pallas(y4, scale, bias, tau=tau, v_th=v_th,
+                                 v_reset=v_reset, eps=NORM_EPS,
+                                 interpret=INTERPRET)
+    return out.reshape(y.shape)
+
+
+def _norm_stats(y4):
+    """Instance-norm intermediates over (T, HW) per (B, C), in the
+    exact reduce formulation both backends share."""
+    mu = jnp.mean(y4, axis=(0, 2), keepdims=True)
+    var = jnp.var(y4, axis=(0, 2), keepdims=True)
+    r = jax.lax.rsqrt(var + NORM_EPS)
+    return (y4 - mu) * r, r
+
+
+def _norm_affine_lif_fwd(y, scale, bias, tau, v_th, v_reset, beta):
+    return _norm_affine_lif(y, scale, bias, tau, v_th, v_reset, beta), \
+        (y, scale, bias)
+
+
+def _norm_affine_lif_bwd(tau, v_th, v_reset, beta, res, g):
+    y, scale, bias = res
+    T, B = y.shape[:2]
+    C = y.shape[-1]
+    # rematerialise the fused intermediates (norm stats + membrane
+    # trajectory) instead of spilling them from the forward kernel
+    yhat, r = _norm_stats(y.reshape(T, B, -1, C))
+    z = yhat * scale + bias
+    xs, ss = _lif_replay(z, tau=tau, v_th=v_th, v_reset=v_reset)
+    dz = _lif_bwd_scan(g.reshape(z.shape), xs, ss, tau=tau, v_th=v_th,
+                       v_reset=v_reset, beta=beta)
+    # affine
+    dyhat = dz * scale
+    dscale = jnp.sum(dz * yhat, axis=(0, 1, 2))
+    dbias = jnp.sum(dz, axis=(0, 1, 2))
+    # instance-norm backward (1/N variance):
+    #   dy = r · (dyhat - mean(dyhat) - yhat · mean(dyhat · yhat))
+    m1 = jnp.mean(dyhat, axis=(0, 2), keepdims=True)
+    m2 = jnp.mean(dyhat * yhat, axis=(0, 2), keepdims=True)
+    dy4 = r * (dyhat - m1 - yhat * m2)
+    return dy4.reshape(y.shape), dscale, dbias
+
+
+_norm_affine_lif.defvjp(_norm_affine_lif_fwd, _norm_affine_lif_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "v_th", "v_reset",
+                                             "beta"))
+def norm_affine_lif_op(y, scale, bias, *, tau: float = 2.0,
+                       v_th: float = 1.0, v_reset: float = 0.0,
+                       beta: float = 4.0):
+    """Fused instance-norm + affine + LIF.  y: [T, B, ..., C] pre-norm
+    conv output; scale, bias: [C] -> spikes, same shape as y.
+    Forward is the single-pass Pallas kernel (bit-exact vs the layered
+    jnp path); backward is the analytic surrogate-gradient BPTT."""
+    return _norm_affine_lif(y, scale, bias, tau, v_th, v_reset, beta)
+
+
+# ---------------------------------------------------------------------------
+# spike_matmul_op: tile-skip forward + plain matmul backward
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def _spike_matmul(x, w):
+    return spike_matmul_pallas(x, w, interpret=INTERPRET)
+
+
+def _spike_matmul_fwd(x, w):
+    return _spike_matmul(x, w), (x, w)
+
+
+def _spike_matmul_bwd(res, g):
+    x, w = res
+    # d/dx is dense (g is not a spike tensor); d/dw contracts over the
+    # spike activations — the sparsity the forward exploits lives in x,
+    # not in the adjoints, so both sides are plain MXU matmuls
+    return g @ w.T, x.T @ g
+
+
+_spike_matmul.defvjp(_spike_matmul_fwd, _spike_matmul_bwd)
 
 
 @jax.jit
 def spike_matmul_op(x, w):
-    return spike_matmul_pallas(x, w, interpret=INTERPRET)
+    """x: [M, K] spikes (0/1), w: [K, N] -> x @ w with whole-zero VMEM
+    tiles skipping their MXU pass; differentiable (plain matmul
+    adjoints — the Heaviside lives upstream in the LIF that produced
+    x, so no surrogate is needed here)."""
+    return _spike_matmul(x, w)
 
 
 @jax.jit

@@ -14,6 +14,23 @@ def lif_scan_ref(currents, *, tau=2.0, v_th=1.0, v_reset=0.0):
     return _lif_scan_jnp(currents, tau=tau, v_th=v_th, v_reset=v_reset)
 
 
+def norm_affine_lif_ref(y, scale, bias, *, tau=2.0, v_th=1.0, v_reset=0.0,
+                        beta=4.0, eps=1e-6):
+    """Layered oracle for the fused kernel.  y: [T, B, ..., C] pre-norm
+    currents -> spikes.  Reduces in the [T, B, HW, C] axis-(0, 2)
+    formulation that repro.core.layers shares with the kernel (the
+    reduce shape IS the bit-parity contract — see lif_scan.py)."""
+    T, B = y.shape[:2]
+    C = y.shape[-1]
+    y4 = y.reshape(T, B, -1, C)
+    mu = jnp.mean(y4, axis=(0, 2), keepdims=True)
+    var = jnp.var(y4, axis=(0, 2), keepdims=True)
+    z = (y4 - mu) * jax.lax.rsqrt(var + eps)
+    z = z * scale + bias
+    return _lif_scan_jnp(z, tau=tau, v_th=v_th, v_reset=v_reset,
+                         beta=beta).reshape(y.shape)
+
+
 def event_voxel_ref(events, *, time_steps, height, width, window=1.0,
                     mode="binary", oob="clip"):
     """Batched EventStream ([B, N] leaves) -> [B, T, H, W, 2]."""

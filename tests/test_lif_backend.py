@@ -1,0 +1,224 @@
+"""Backend-parity suite for the kernel-backed NPU hot path
+(SNNConfig.backend="pallas", interpret mode on CPU).
+
+Contract (ISSUE 3 acceptance): forward is BIT-EXACT vs the jnp
+reference — same decay rounding, same threshold comparison, same norm
+reduce shape — and the custom-VJP surrogate gradients match jax.grad
+of the jnp reference to <= 1e-5 relative.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_snn
+from repro.core.layers import apply_spiking_conv, apply_spiking_dense
+from repro.core.lif import lif_scan
+from repro.core.npu import init_npu, npu_forward
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+def _maxrel(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-30))
+
+
+def _tree_maxrel(ta, tb):
+    return max(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(_maxrel, ta, tb)))
+
+
+# ---------------------------------------------------------------------------
+# lif_scan: flat [T, N] kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,N", [(3, 64), (5, 300), (8, 1025), (2, 4096)])
+@pytest.mark.parametrize("tau", [1.5, 2.0, 5.0])
+def test_lif_forward_bitexact(T, N, tau):
+    """Incl. non-multiple-of-BLOCK_N widths (300, 1025): the pad/slice
+    path must not perturb live lanes."""
+    cur = jnp.asarray(RNG.normal(0.6, 1.0, (T, N)).astype(np.float32))
+    out = ops.lif_scan_op(cur, tau=tau)
+    want = jax.jit(lambda c: lif_scan(c, tau=tau))(cur)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+    assert 0.0 < float(jnp.mean(out)) < 1.0
+
+
+@pytest.mark.parametrize("tau,beta", [(2.0, 4.0), (3.0, 2.0)])
+def test_lif_custom_vjp_matches_reference_grad(tau, beta):
+    cur = jnp.asarray(RNG.normal(0.8, 0.5, (4, 3, 40)).astype(np.float32))
+    wv = jnp.asarray(RNG.normal(0, 1, cur.shape).astype(np.float32))
+    g_p = jax.grad(lambda c: jnp.sum(
+        ops.lif_scan_op(c, tau=tau, beta=beta) * wv))(cur)
+    g_j = jax.grad(lambda c: jnp.sum(
+        lif_scan(c, tau=tau, beta=beta) * wv))(cur)
+    assert _maxrel(g_p, g_j) <= 1e-5
+    assert float(jnp.sum(jnp.abs(g_p))) > 0    # surrogate actually flows
+
+
+# ---------------------------------------------------------------------------
+# norm_affine_lif: fused spiking-conv epilogue
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,B,HW,C", [(3, 2, 64, 16), (5, 1, 100, 8),
+                                      (2, 4, 33, 24)])
+def test_norm_affine_lif_forward_bitexact(T, B, HW, C):
+    y = jnp.asarray(RNG.normal(0.3, 1.0, (T, B, HW, C)).astype(np.float32))
+    scale = jnp.asarray(RNG.normal(1, 0.2, (C,)).astype(np.float32))
+    bias = jnp.asarray(RNG.normal(0, 0.1, (C,)).astype(np.float32))
+    out = ops.norm_affine_lif_op(y, scale, bias)
+    want = jax.jit(ref.norm_affine_lif_ref)(y, scale, bias)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_norm_affine_lif_grad_parity():
+    T, B, HW, C = 3, 2, 48, 12
+    y = jnp.asarray(RNG.normal(0.3, 1.0, (T, B, HW, C)).astype(np.float32))
+    scale = jnp.asarray(RNG.normal(1, 0.2, (C,)).astype(np.float32))
+    bias = jnp.asarray(RNG.normal(0, 0.1, (C,)).astype(np.float32))
+    wv = jnp.asarray(RNG.normal(0, 1, y.shape).astype(np.float32))
+    g_p = jax.grad(lambda y, s, b: jnp.sum(
+        ops.norm_affine_lif_op(y, s, b) * wv), argnums=(0, 1, 2))(
+            y, scale, bias)
+    g_j = jax.grad(lambda y, s, b: jnp.sum(
+        ref.norm_affine_lif_ref(y, s, b) * wv), argnums=(0, 1, 2))(
+            y, scale, bias)
+    for got, want in zip(g_p, g_j):
+        assert _maxrel(got, want) <= 1e-5
+
+
+def test_spiking_conv_backend_bitexact():
+    """apply_spiking_conv routes the fused kernel and stays bit-exact,
+    for both the norm+fire epilogue and the fire-only dispatch."""
+    from repro.core.layers import init_spiking_conv
+    cfg_j = reduced_snn("spiking_vgg")
+    cfg_p = dataclasses.replace(cfg_j, backend="pallas")
+    p = init_spiking_conv(jax.random.PRNGKey(0), 2, 8)
+    x = jnp.asarray((RNG.random((3, 2, 16, 16, 2)) < 0.2)
+                    .astype(np.float32))
+    for kw in ({}, {"normalize": False}):
+        a = jax.jit(lambda p, x: apply_spiking_conv(p, x, cfg_p, **kw))(p, x)
+        b = jax.jit(lambda p, x: apply_spiking_conv(p, x, cfg_j, **kw))(p, x)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_unknown_backend_rejected():
+    cfg = dataclasses.replace(reduced_snn("spiking_vgg"), backend="typo")
+    from repro.core.layers import init_spiking_conv
+    p = init_spiking_conv(jax.random.PRNGKey(0), 2, 8)
+    x = jnp.zeros((3, 1, 8, 8, 2))
+    with pytest.raises(ValueError, match="backend"):
+        apply_spiking_conv(p, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# spike_matmul: tile-skip dense path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.5])
+@pytest.mark.parametrize("M,K,N", [(24, 64, 8), (130, 257, 129)])
+def test_spike_matmul_op_parity(M, K, N, density):
+    """0/1 inputs incl. the all-zero case (density=0.0: every tile is
+    skipped and the output must still be exact zeros)."""
+    x = jnp.asarray((RNG.random((M, K)) < density).astype(np.float32))
+    w = jnp.asarray(RNG.normal(0, 1, (K, N)).astype(np.float32))
+    out = ops.spike_matmul_op(x, w)
+    want = ref.spike_matmul_ref(x, w)
+    if density == 0.0:
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=1e-4)
+
+
+def test_spike_matmul_custom_vjp():
+    x = jnp.asarray((RNG.random((24, 64)) < 0.3).astype(np.float32))
+    w = jnp.asarray(RNG.normal(0, 1, (64, 8)).astype(np.float32))
+    g_p = jax.grad(lambda x, w: jnp.sum(
+        jnp.sin(ops.spike_matmul_op(x, w))), argnums=(0, 1))(x, w)
+    g_j = jax.grad(lambda x, w: jnp.sum(
+        jnp.sin(x @ w)), argnums=(0, 1))(x, w)
+    for got, want in zip(g_p, g_j):
+        assert _maxrel(got, want) <= 1e-5
+
+
+def test_spiking_dense_spike_input_routes_and_matches():
+    from repro.core.layers import init_spiking_dense
+    cfg_j = reduced_snn("spiking_yolo")
+    cfg_p = dataclasses.replace(cfg_j, backend="pallas")
+    p = init_spiking_dense(jax.random.PRNGKey(0), 32, 16)
+    spikes = jnp.asarray((RNG.random((3, 4, 32)) < 0.3).astype(np.float32))
+    a = jax.jit(lambda p, x: apply_spiking_dense(
+        p, x, cfg_p, fire=False, spike_input=True))(p, spikes)
+    b = jax.jit(lambda p, x: apply_spiking_dense(
+        p, x, cfg_j, fire=False))(p, spikes)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# npu_forward: the acceptance bar — whole-network backend parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def npu_setup():
+    cfg_j = reduced_snn("spiking_yolo")
+    cfg_p = reduced_snn("spiking_yolo", backend="pallas")
+    params = init_npu(jax.random.PRNGKey(1), cfg_j)
+    vox = jnp.asarray((RNG.random(
+        (cfg_j.time_steps, 2, cfg_j.height, cfg_j.width,
+         cfg_j.in_channels)) < 0.1).astype(np.float32))
+    return cfg_j, cfg_p, params, vox
+
+
+def test_npu_forward_backend_bitexact(npu_setup):
+    cfg_j, cfg_p, params, vox = npu_setup
+    out_j = jax.jit(lambda p, v: npu_forward(p, v, cfg_j))(params, vox)
+    out_p = jax.jit(lambda p, v: npu_forward(p, v, cfg_p))(params, vox)
+    np.testing.assert_array_equal(np.asarray(out_p.raw_pred),
+                                  np.asarray(out_j.raw_pred))
+    np.testing.assert_array_equal(np.asarray(out_p.control),
+                                  np.asarray(out_j.control))
+    np.testing.assert_array_equal(np.asarray(out_p.sparsity),
+                                  np.asarray(out_j.sparsity))
+
+
+def test_npu_forward_backend_grad_parity(npu_setup):
+    """BPTT through the whole kernel-backed network: <= 1e-5 relative
+    on every parameter leaf vs the jnp reference."""
+    cfg_j, cfg_p, params, vox = npu_setup
+
+    def loss(p, cfg):
+        out = npu_forward(p, vox, cfg)
+        return jnp.sum(jnp.sin(out.raw_pred)) + jnp.sum(out.control)
+
+    g_p = jax.jit(jax.grad(lambda p: loss(p, cfg_p)))(params)
+    g_j = jax.jit(jax.grad(lambda p: loss(p, cfg_j)))(params)
+    assert _tree_maxrel(g_p, g_j) <= 1e-5
+    total = sum(float(jnp.sum(jnp.abs(l)))
+                for l in jax.tree_util.tree_leaves(g_p))
+    assert total > 0                           # gradients actually flow
+
+
+def test_train_step_runs_on_pallas_backend(npu_setup):
+    """One surrogate-BPTT AdamW step through the kernel backend stays
+    finite and tracks the jnp-backend step."""
+    from repro.core.train import init_snn_state, make_snn_train_step
+    from repro.data.synthetic import make_scene_batch
+    from repro.optim.adamw import AdamWConfig
+    cfg_j, cfg_p, params, _ = npu_setup
+    opt = AdamWConfig(lr=1e-3)
+    scene = make_scene_batch(jax.random.PRNGKey(5), batch=2,
+                             height=cfg_j.height, width=cfg_j.width,
+                             time_steps=cfg_j.time_steps)
+    outs = {}
+    for cfg in (cfg_j, cfg_p):
+        state = init_snn_state(params, opt)
+        step = jax.jit(make_snn_train_step(cfg, opt))
+        state, metrics = step(state, scene)
+        assert np.isfinite(float(metrics["loss"]))
+        outs[cfg.backend] = (state.params, float(metrics["loss"]))
+    assert outs["pallas"][1] == pytest.approx(outs["jnp"][1], rel=1e-5)
+    assert _tree_maxrel(outs["pallas"][0], outs["jnp"][0]) <= 1e-4

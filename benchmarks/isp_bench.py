@@ -1,30 +1,52 @@
-"""ISP stage timings (paper §V: pipelined real-time correction) — CPU
-wall-time per stage + full pipeline at 128x128, jnp vs Pallas kernels.
+"""ISP timings (paper §V: pipelined real-time correction) — CPU
+wall-time at 128x128 across the three ISP backends:
+
+  * per-stage rows (the §V stage table, jnp reference),
+  * full-pipeline rows per named pipeline x backend
+    (jnp / pallas / pallas_fused — the fusion-planned streaming path),
+  * batched-frame rows (the engine's vmapped tick shape),
+  * an engine-tick ISP-share row: how much of a cognitive tick the ISP
+    half costs, and what the fused path does to it.
+
+``isp_pipeline_full`` (per-stage jnp, the historical row) and
+``isp_pipeline_full_fused`` carry the headline ratio in the derived
+column, so BENCH_<n>.json records the fused speedup across PRs.
 """
 from __future__ import annotations
+
+import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_us as _time
-from repro.configs.registry import get_isp_config
+from benchmarks.common import smoke_reps, time_us as _time
+from repro.configs.registry import get_isp_config, reduced_snn
+from repro.core.encoding import voxel_batch
+from repro.core.npu import init_npu
+from repro.data.synthetic import make_scene_batch
 from repro.isp.awb import apply_wb, awb_gains
 from repro.isp.demosaic import demosaic_mhc
 from repro.isp.dpc import dpc_correct
+from repro.isp.fuse import describe_plan, memory_passes
 from repro.isp.gamma import apply_gamma, gamma_lut, sharpen_luma
 from repro.isp.nlm import nlm_denoise
-from repro.isp.pipeline import default_params, isp_pipeline, run_pipeline
+from repro.isp.pipeline import default_params, isp_pipeline
+from repro.isp.stages import default_stage_params, run_stages
 from repro.isp.tone import apply_saturation, reinhard_tonemap
+from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
 
 H = W = 128
+PIPELINES = ("default", "hdr", "fast_preview")
+ISP_BACKENDS = ("jnp", "pallas", "pallas_fused")
+BATCH = 4
 
 
-def run(emit):
-    rng = np.random.default_rng(0)
-    raw = jnp.asarray(rng.random((H, W)).astype(np.float32))
-    rgb = jnp.asarray(rng.random((H, W, 3)).astype(np.float32))
+def _pipeline_fn(stages, backend):
+    return jax.jit(lambda r, p: run_stages(r, p, stages, backend))
 
+
+def _stage_rows(emit, raw, rgb):
     emit("isp_dpc", _time(jax.jit(lambda r: dpc_correct(r)[0]), raw),
          f"{H}x{W}")
     emit("isp_demosaic_mhc", _time(jax.jit(demosaic_mhc), raw), f"{H}x{W}")
@@ -41,10 +63,84 @@ def run(emit):
         lambda x: reinhard_tonemap(x, 0.5)), rgb), f"{H}x{W}")
     emit("isp_ccm_saturation", _time(jax.jit(
         lambda x: apply_saturation(x, 1.2)), rgb), f"{H}x{W}")
+
+
+def _backend_sweep(emit, raw):
+    """Full-pipeline rows: named pipeline x backend, plus batched-frame
+    rows in the engine's vmapped shape."""
+    for name in PIPELINES:
+        cfg = get_isp_config(name)
+        sp = default_stage_params(cfg.stages)
+        for backend in ISP_BACKENDS:
+            t = _time(_pipeline_fn(cfg.stages, backend), raw, sp)
+            derived = f"{1e6 / t:.1f}fps"
+            if backend == "pallas_fused":
+                derived += (f" {memory_passes(cfg.stages)}passes"
+                            f"/{len(cfg.stages)}stages")
+            emit(f"isp_pipeline_{name}_{backend}", t, derived)
+    # batched frames (vmap over the batch, shared scalar params)
+    raws = jnp.stack([raw] * BATCH)
+    cfg = get_isp_config("default")
+    sp = default_stage_params(cfg.stages)
+    for backend in ("jnp", "pallas_fused"):
+        fn = jax.jit(jax.vmap(
+            lambda r, p=sp, s=cfg.stages, b=backend: run_stages(r, p, s, b)))
+        t = _time(fn, raws)
+        emit(f"isp_batch{BATCH}_default_{backend}", t,
+             f"{BATCH * 1e6 / t:.1f}fps")
+
+
+def _tick_share_row(emit):
+    """How much of an engine tick the ISP half costs: tick wall time
+    with the default per-stage ISP vs the fused ISP; derived column =
+    fused tick's share of the per-stage tick."""
+    cfg = reduced_snn("spiking_yolo")
+    params = init_npu(jax.random.PRNGKey(1), cfg)
+    scene = make_scene_batch(jax.random.PRNGKey(3), batch=BATCH,
+                             height=cfg.height, width=cfg.width,
+                             time_steps=cfg.time_steps)
+    vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                      height=cfg.height, width=cfg.width)
+    ticks = {}
+    for isp_name in ("default", "fused"):
+        eng = CognitiveEngine(params, cfg, get_isp_config(isp_name),
+                              batch=BATCH)
+
+        def _drive():
+            for i in range(BATCH):
+                eng.submit(PerceptionRequest(rid=i, voxels=vox[:, i],
+                                             bayer=scene.bayer[i]))
+            return eng.tick()
+
+        _drive()                               # warm the tick executable
+        reps = smoke_reps(5)
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            done = _drive()
+        jax.block_until_ready(done[-1].result.rgb)
+        ticks[isp_name] = (time.perf_counter() - t0) / reps * 1e6
+    emit("engine_tick_isp_default", ticks["default"],
+         f"{BATCH * 1e6 / ticks['default']:.1f}req_s")
+    emit("engine_tick_isp_fused", ticks["fused"],
+         f"{ticks['fused'] / ticks['default']:.2f}x_of_perstage_tick")
+
+
+def run(emit):
+    rng = np.random.default_rng(0)
+    raw = jnp.asarray(rng.random((H, W)).astype(np.float32))
+    rgb = jnp.asarray(rng.random((H, W, 3)).astype(np.float32))
+
+    _stage_rows(emit, raw, rgb)
+
+    # historical headline rows + the fused speedup ratio
     full = _time(jax.jit(lambda r: isp_pipeline(r, default_params())), raw)
     emit("isp_pipeline_full", full, f"{1e6 / full:.1f}fps")
-    # registry-built pipelines (stage orderings are jit-static configs)
-    for name in ("hdr", "fast_preview"):
-        cfg = get_isp_config(name)
-        t = _time(jax.jit(lambda r, c=cfg: run_pipeline(r, None, c)), raw)
-        emit(f"isp_pipeline_{name}", t, f"{1e6 / t:.1f}fps")
+    cfg = get_isp_config("default")
+    fused = _time(_pipeline_fn(cfg.stages, "pallas_fused"), raw,
+                  default_stage_params(cfg.stages))
+    emit("isp_pipeline_full_fused", fused,
+         f"{full / fused:.2f}x_vs_per_stage "
+         f"({describe_plan(cfg.stages)})")
+
+    _backend_sweep(emit, raw)
+    _tick_share_row(emit)

@@ -13,7 +13,15 @@ carry a bounded DVS event buffer instead of finished voxels —
 executable voxelizes it (scenario generators sweep the event-rate
 regimes: ego-motion, night flicker, noise storms, crossings).
 
+``--fused`` serves the ISP half through the fusion planner
+(``backend="pallas_fused"``): the stage ordering collapses into a few
+tile-resident megakernel passes — the software analogue of the paper's
+line-buffered single-pass datapath.  Either way a per-tick ISP timing
+comparison (per-stage jnp vs fused) is printed so the speedup is
+visible.
+
   PYTHONPATH=src python examples/cognitive_stream.py [--frames 12]
+  PYTHONPATH=src python examples/cognitive_stream.py --fused
 """
 import argparse
 import time
@@ -25,6 +33,8 @@ from repro.configs.registry import get_isp_config, reduced_snn
 from repro.core.encoding import voxel_batch
 from repro.core.npu import configure_for_isp, init_npu
 from repro.data.synthetic import SCENARIOS, make_scenario, make_scene_batch
+from repro.isp.pipeline import plan_summary
+from repro.isp.stages import default_stage_params, run_stages
 from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
 
 
@@ -44,22 +54,45 @@ def drive(engine, reqs, label):
     dt = time.perf_counter() - t0
     print(f"  {label}: {len(done)} frames in {engine.ticks} ticks "
           f"({len(done) / dt:.1f} fps, "
+          f"last tick {engine.last_tick_s * 1e3:.1f} ms, "
           f"{engine._step._cache_size()} executable(s))")
     return done
+
+
+def time_isp_per_tick(cfg, isp_cfg, batch, reps=5):
+    """Per-tick cost of the ISP half alone: the batched pipeline in the
+    engine's vmapped shape, jit-warmed, mean wall time."""
+    bayer = make_scene_batch(jax.random.PRNGKey(7), batch=batch,
+                             height=cfg.height, width=cfg.width).bayer
+    sp = default_stage_params(isp_cfg.stages)
+    fn = jax.jit(jax.vmap(lambda r: run_stages(
+        r, sp, isp_cfg.stages, isp_cfg.backend)))
+    jax.block_until_ready(fn(bayer))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(bayer)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=12)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--fused", action="store_true",
+                    help="serve the ISP through the fusion planner "
+                         "(backend='pallas_fused')")
     args = ap.parse_args()
 
     cfg = reduced_snn("spiking_yolo")
+    isp = get_isp_config("fused" if args.fused else "default")
 
-    print(f"default pipeline (control_dim derived = "
-          f"{get_isp_config('default').control_dim}):")
+    print(f"{isp.name} pipeline (control_dim derived = "
+          f"{isp.control_dim}):")
+    if args.fused:
+        print(f"  fusion plan: {plan_summary(isp)}")
     params = init_npu(jax.random.PRNGKey(0), cfg)
-    eng = CognitiveEngine(params, cfg, batch=args.batch)
+    eng = CognitiveEngine(params, cfg, isp, batch=args.batch)
     done = drive(eng, make_requests(cfg, args.frames), "stream")
     if done:
         r = done[0].result
@@ -82,9 +115,11 @@ def main():
               f"-> FIFO of {enc.event_capacity}")
     drive(eng_ev, reqs, "event stream")
 
-    hdr = get_isp_config("hdr")
-    print(f"\nhdr pipeline {hdr.stages} "
+    hdr = get_isp_config("hdr_fused" if args.fused else "hdr")
+    print(f"\n{hdr.name} pipeline {hdr.stages} "
           f"(control_dim derived = {hdr.control_dim}):")
+    if args.fused:
+        print(f"  fusion plan: {plan_summary(hdr)}")
     cfg_hdr = configure_for_isp(cfg, hdr)
     params_hdr = init_npu(jax.random.PRNGKey(1), cfg_hdr)
     eng_hdr = CognitiveEngine(params_hdr, cfg_hdr, hdr, batch=args.batch)
@@ -94,6 +129,14 @@ def main():
         print(f"  frame 0: tonemap="
               f"{float(r.stage_params['tonemap']['strength']):.2f} "
               f"saturation={float(r.stage_params['ccm']['saturation']):.2f}")
+
+    print("\nper-tick ISP cost (batched pipeline alone, "
+          f"{args.batch}x{cfg.height}x{cfg.width}):")
+    t_ps = time_isp_per_tick(cfg, get_isp_config("default"), args.batch)
+    t_fu = time_isp_per_tick(cfg, get_isp_config("fused"), args.batch)
+    print(f"  per-stage jnp : {t_ps * 1e3:6.1f} ms/tick")
+    print(f"  pallas_fused  : {t_fu * 1e3:6.1f} ms/tick "
+          f"({t_ps / t_fu:.2f}x, plan {plan_summary()})")
 
 
 if __name__ == "__main__":

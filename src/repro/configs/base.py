@@ -204,10 +204,17 @@ class ISPConfig:
     repro.isp.stages).  Frozen/hashable, so usable as a jit static arg;
     reordering, dropping, or appending stages is a config edit, not a
     code change — the software analogue of reprogramming the FPGA
-    datapath."""
+    datapath.
+
+    ``backend``: "jnp" (pure-XLA reference, one op per stage),
+    "pallas" (per-stage kernels where registered), or "pallas_fused"
+    (the fusion planner in repro.isp.fuse — the stage ordering is
+    segmented into tile-resident megakernels and executed in
+    O(#segments) memory passes, the software analogue of the paper's
+    line-buffered single-pass datapath)."""
     name: str = "default"
     stages: Tuple[str, ...] = DEFAULT_ISP_STAGES
-    backend: str = "jnp"            # "jnp" | "pallas" (registry-resolved)
+    backend: str = "jnp"            # "jnp" | "pallas" | "pallas_fused"
 
     @property
     def control_dim(self) -> int:

@@ -204,10 +204,20 @@ def reduced_snn(name: str, backend: str = "jnp") -> SNNConfig:
 ISP_CONFIGS: Dict[str, ISPConfig] = {
     "default": ISPConfig(name="default"),
     "pallas": ISPConfig(name="pallas", backend="pallas"),
+    # Streaming fused path: the default ordering through the fusion
+    # planner — [exposure+dpc] [demosaic] [awb*+nlm] [gamma+sharpen],
+    # 4 kernel launches instead of 7 stage ops (repro.isp.fuse).
+    "fused": ISPConfig(name="fused", backend="pallas_fused"),
     # HDR capture: tone-map after denoise, colour-matrix before gamma.
     "hdr": ISPConfig(name="hdr",
                      stages=DEFAULT_ISP_STAGES[:5]
                      + ("tonemap", "ccm") + DEFAULT_ISP_STAGES[5:]),
+    # The hdr ordering fused: its 4-stage pointwise tail collapses into
+    # ONE kernel — 9 stages, still 4 launches.
+    "hdr_fused": ISPConfig(name="hdr_fused",
+                           stages=DEFAULT_ISP_STAGES[:5]
+                           + ("tonemap", "ccm") + DEFAULT_ISP_STAGES[5:],
+                           backend="pallas_fused"),
     # Latency-critical preview: drop NLM (the most expensive stage)
     # and sharpen — bare exposure/DPC/demosaic/AWB/gamma, control_dim 6.
     "fast_preview": ISPConfig(

@@ -9,8 +9,8 @@ from repro.isp.pipeline import (ISPParams, control_to_params,  # noqa: F401
                                 control_vector_pipeline, default_params,
                                 isp_pipeline, isp_pipeline_batch,
                                 legacy_control_permutation,
-                                params_to_stage_params, run_pipeline,
-                                run_pipeline_batch)
+                                params_to_stage_params, plan_summary,
+                                run_pipeline, run_pipeline_batch)
 from repro.isp.stages import (BACKENDS, STAGES, ParamSpec,  # noqa: F401
                               Stage, control_dim_for,
                               control_to_stage_params, default_stage_params,

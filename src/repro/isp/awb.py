@@ -32,3 +32,26 @@ def apply_wb(rgb, gains: jax.Array,
     if npu_bias is not None:
         gains = gains * jnp.stack([npu_bias[0], jnp.ones(()), npu_bias[1]])
     return jnp.clip(rgb * gains, 0.0, 1.0)
+
+
+# --- reduce-stage decomposition for the fused ISP path ---------------------
+# AWB is the pipeline's one global reduction: the grey-world gains need
+# the WHOLE image, so the fusion planner runs ``awb_stats`` as an
+# up-front stats pass on the stage's (materialised) input and fuses the
+# purely pointwise ``awb_apply_stats`` into the segment kernel.
+
+AWB_STATS_WIDTH = 3   # grey-world gains (r, g, b)
+
+
+def awb_stats(rgb, p) -> jax.Array:
+    """Global stats pass: [H, W, 3] -> the [3] grey-world gains."""
+    return awb_gains(rgb)
+
+
+def awb_apply_stats(rgb, p, stats: jax.Array) -> jax.Array:
+    """Pointwise application of precomputed grey-world gains with the
+    NPU enable blend and r/b bias — same op order as the monolithic
+    stage impl, so fused and per-stage paths stay bit-identical."""
+    gains = p["enable"] * stats + (1.0 - p["enable"]) * jnp.ones(3)
+    return apply_wb(rgb, gains,
+                    npu_bias=jnp.stack([p["bias_r"], p["bias_b"]]))

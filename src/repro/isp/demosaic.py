@@ -48,6 +48,26 @@ def _conv5(img, kernel):
         dimension_numbers=("NCHW", "OIHW", "NCHW"))[0, 0]
 
 
+def _conv5_taps(padded, kernel, h: int, w: int):
+    """SAME 5x5 convolution as an explicit tap accumulation over a
+    zero-padded ``[h+4, w+4]`` input (zero taps skipped; the filter
+    bank is sparse).  Both the full-image reference and the fused
+    window form run THIS function, so their op order — and therefore
+    their float output — is identical.  ``lax.conv`` would be terser,
+    but its reduction order differs between execution contexts (e.g.
+    inside a Pallas kernel), which breaks bit-parity, and a kernel
+    cannot close over the filter-bank constants anyway; scalar taps
+    sidestep both."""
+    acc = jnp.zeros((h, w), jnp.float32)
+    for dy in range(5):
+        for dx in range(5):
+            kv = float(kernel[dy, dx])
+            if kv == 0.0:
+                continue
+            acc = acc + kv * padded[dy:dy + h, dx:dx + w]
+    return acc
+
+
 def bayer_phases(H: int, W: int):
     """RGGB phase masks: (is_r, is_g1, is_g2, is_b), each [H, W] bool."""
     yy, xx = jnp.meshgrid(jnp.arange(H), jnp.arange(W), indexing="ij")
@@ -55,16 +75,10 @@ def bayer_phases(H: int, W: int):
     return (ey & ex), (ey & ~ex), (~ey & ex), (~ey & ~ex)
 
 
-def demosaic_mhc(raw):
-    """raw: [H, W] RGGB mosaic in [0,1] -> RGB [H, W, 3]."""
-    H, W = raw.shape
-    is_r, is_g1, is_g2, is_b = bayer_phases(H, W)
-
-    g_interp = _conv5(raw, _F_G)
-    rb_row = _conv5(raw, _F_RB_ROW)
-    rb_col = _conv5(raw, _F_RB_COL)
-    rb_diag = _conv5(raw, _F_RB_DIAG)
-
+def _mhc_select(raw, g_interp, rb_row, rb_col, rb_diag, phases):
+    """Phase-mask selection shared by the full-image and windowed
+    forms (identical op order -> bit-identical outputs)."""
+    is_r, is_g1, is_g2, is_b = phases
     # green: native at G sites, interpolated at R/B
     g = jnp.where(is_r | is_b, g_interp, raw)
     # red: native at R; row-filter at G1 (R row), col-filter at G2, diag at B
@@ -76,3 +90,38 @@ def demosaic_mhc(raw):
                   jnp.where(is_g2, rb_row,
                             jnp.where(is_g1, rb_col, rb_diag)))
     return jnp.clip(jnp.stack([r, g, b], axis=-1), 0.0, 1.0)
+
+
+def _mhc_filtered(padded, h: int, w: int, phases):
+    """Filter bank + phase select on a zero-padded ``[h+4, w+4]``
+    mosaic: the single code path both :func:`demosaic_mhc` and
+    :func:`demosaic_window` run."""
+    centre = padded[2:2 + h, 2:2 + w]
+    return _mhc_select(centre, _conv5_taps(padded, _F_G, h, w),
+                       _conv5_taps(padded, _F_RB_ROW, h, w),
+                       _conv5_taps(padded, _F_RB_COL, h, w),
+                       _conv5_taps(padded, _F_RB_DIAG, h, w), phases)
+
+
+def demosaic_mhc(raw):
+    """raw: [H, W] RGGB mosaic in [0,1] -> RGB [H, W, 3]."""
+    H, W = raw.shape
+    return _mhc_filtered(jnp.pad(raw, ((2, 2), (2, 2))), H, W,
+                         bayer_phases(H, W))
+
+
+DEMOSAIC_RADIUS = 2   # 5x5 MHC filter bank
+
+
+def demosaic_window(win, p, *, y0: int, x0: int, bh: int, bw: int, **_):
+    """Tile-resident form for the fused ISP path: ``win`` is a
+    ``[bh+4, bw+4]`` zero-padded window (matching the reference's SAME
+    zero padding) whose top-left interior pixel sits at absolute
+    mosaic coordinate ``(y0, x0)``; returns the ``[bh, bw, 3]`` RGB
+    tile.  Shares ``_mhc_filtered`` with :func:`demosaic_mhc`, so the
+    tile is bit-identical to the full-image form."""
+    yy = y0 + jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 0)
+    xx = x0 + jax.lax.broadcasted_iota(jnp.int32, (bh, bw), 1)
+    ey, ex = (yy % 2 == 0), (xx % 2 == 0)
+    phases = (ey & ex), (ey & ~ex), (~ey & ex), (~ey & ~ex)
+    return _mhc_filtered(win, bh, bw, phases)

@@ -26,12 +26,10 @@ def _same_color_neighbours(img):
     return jnp.stack(pads, axis=-1)
 
 
-def dpc_correct(raw, threshold: float = 0.2):
-    """raw: [H, W] in [0,1]. A pixel is defective when it deviates from
-    *every* same-colour neighbour by more than ``threshold`` with a
-    consistent sign (dead/hot), matching the dynamic detection rule."""
-    nb = _same_color_neighbours(raw)
-    diff = raw[..., None] - nb
+def _dpc_decide(centre, nb, threshold):
+    """Shared detect/replace maths for the full-image and windowed
+    forms: identical op order keeps the two bit-identical."""
+    diff = centre[..., None] - nb
     hot = jnp.all(diff > threshold, axis=-1)
     dead = jnp.all(diff < -threshold, axis=-1)
     defective = hot | dead
@@ -42,4 +40,33 @@ def dpc_correct(raw, threshold: float = 0.2):
     # effective against salt-and-pepper defects.
     med = (jnp.sum(nb, axis=-1) - jnp.min(nb, axis=-1)
            - jnp.max(nb, axis=-1)) / 6.0
-    return jnp.where(defective, med, raw), defective
+    return jnp.where(defective, med, centre), defective
+
+
+def dpc_correct(raw, threshold: float = 0.2):
+    """raw: [H, W] in [0,1]. A pixel is defective when it deviates from
+    *every* same-colour neighbour by more than ``threshold`` with a
+    consistent sign (dead/hot), matching the dynamic detection rule."""
+    return _dpc_decide(raw, _same_color_neighbours(raw), threshold)
+
+
+DPC_RADIUS = 2   # distance-2 same-colour neighbours -> 5x5 halo
+
+
+def dpc_window(win, p, *, bh: int, bw: int, **_):
+    """Tile-resident form for the fused ISP path: ``win`` is a
+    ``[bh+4, bw+4]`` halo'd window (wrap-padded, matching the
+    reference's cyclic ``jnp.roll``); returns the corrected ``[bh, bw]``
+    tile.  Neighbour gathers become static slices of the window —
+    the same values ``_same_color_neighbours`` rolls into place, so
+    the output is bit-identical to :func:`dpc_correct`."""
+    r = DPC_RADIUS
+    nbs = []
+    for dy in (-2, 0, 2):
+        for dx in (-2, 0, 2):
+            if dy == 0 and dx == 0:
+                continue
+            # roll(img, (dy, dx))[y, x] == img[y - dy, x - dx]
+            nbs.append(win[r - dy:r - dy + bh, r - dx:r - dx + bw])
+    centre = win[r:r + bh, r:r + bw]
+    return _dpc_decide(centre, jnp.stack(nbs, axis=-1), p["threshold"])[0]

@@ -52,3 +52,34 @@ def sharpen_luma(rgb, amount) -> jax.Array:
     y2 = jnp.clip(y + amount * (y - blur), 0.0, 1.0)
     ycc = ycc.at[..., 0].set(y2)
     return ycbcr_to_rgb(ycc)
+
+
+SHARPEN_RADIUS = 1   # 5-point cross blur on the luma plane
+
+# Array constants the windowed form needs inside a Pallas kernel (a
+# kernel body cannot close over non-scalar constants): the BT.601
+# matrix, the chroma offset, and the precomputed inverse matrix —
+# the same ``jnp.linalg.inv`` the reference folds at trace time.
+_YCC_OFFSET = jnp.array([0.0, 0.5, 0.5], jnp.float32)
+SHARPEN_CONSTS = (_RGB2YCBCR, _YCC_OFFSET, jnp.linalg.inv(_RGB2YCBCR))
+
+
+def sharpen_window(win, p, *, bh: int, bw: int, consts=SHARPEN_CONSTS,
+                   **_):
+    """Tile-resident form for the fused ISP path: ``win`` is a
+    ``[bh+2, bw+2, 3]`` halo'd window (wrap-padded, matching the
+    reference's cyclic ``jnp.roll``); returns the sharpened
+    ``[bh, bw, 3]`` tile.  The colour-space round trip runs on the
+    whole window (halo pixels are copies of real pixels, so this is
+    exact) and the cross blur replays the reference's summation
+    order — bit-identical to :func:`sharpen_luma`."""
+    mat, off, inv = consts
+    ycc = jnp.einsum("...c,dc->...d", win, mat) + off
+    y = ycc[..., 0]
+    # roll(y, 1, 0)[i] == y[i - 1]: same up/down/left/right fold order
+    y_c = y[1:-1, 1:-1]
+    blur = (y_c + y[0:-2, 1:-1] + y[2:, 1:-1]
+            + y[1:-1, 0:-2] + y[1:-1, 2:]) / 5.0
+    y2 = jnp.clip(y_c + p["amount"] * (y_c - blur), 0.0, 1.0)
+    ycc_c = ycc[1:-1, 1:-1].at[..., 0].set(y2) - off
+    return jnp.clip(jnp.einsum("...c,dc->...d", ycc_c, inv), 0.0, 1.0)

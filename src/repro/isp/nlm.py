@@ -44,3 +44,41 @@ def nlm_denoise(img, strength: float = 0.1, search: int = 7,
     wsum = sum(weights)
     out = sum(accum) / jnp.maximum(wsum[..., None], 1e-9)
     return out[..., 0] if single else out
+
+
+NLM_RADIUS = 4   # 3 (search radius) + 1 (patch radius)
+
+
+def nlm_window(win, p, *, bh: int, bw: int, **_):
+    """Tile-resident form for the fused ISP path: ``win`` is a
+    ``[bh+8, bw+8, C]`` halo'd window (wrap-padded, matching the
+    reference's cyclic ``jnp.roll``); returns the denoised
+    ``[bh, bw, C]`` tile.  Every roll becomes a static slice and the
+    3x3 box filter replays the reference's exact summation order, so
+    the tile is bit-identical to :func:`nlm_denoise`."""
+    R = NLM_RADIUS
+    h = 1e-3 + 0.2 * p["strength"]
+    lum = jnp.mean(win, axis=-1)
+
+    def box3_interior(e):
+        # e: [bh+2, bw+2] -> [bh, bw]; same fold order as _box3:
+        # x + roll(x, 1, ax) + roll(x, -1, ax), axis 0 then axis 1
+        s = e[1:-1] + e[0:-2] + e[2:]
+        s = s[:, 1:-1] + s[:, 0:-2] + s[:, 2:]
+        return s / 9.0
+
+    # centre luminance over the patch-extended region [bh+2, bw+2]
+    lum_c = lum[R - 1:R + bh + 1, R - 1:R + bw + 1]
+    wsum, acc = None, None
+    for dy in range(-3, 4):
+        for dx in range(-3, 4):
+            # roll(a, (dy, dx))[y, x] == a[y - dy, x - dx]
+            lum_s = lum[R - 1 - dy:R - 1 - dy + bh + 2,
+                        R - 1 - dx:R - 1 - dx + bw + 2]
+            d2 = box3_interior((lum_c - lum_s) ** 2)
+            w = jnp.exp(-d2 / (h * h))
+            shifted = win[R - dy:R - dy + bh, R - dx:R - dx + bw]
+            term = w[..., None] * shifted
+            wsum = w if wsum is None else wsum + w
+            acc = term if acc is None else acc + term
+    return acc / jnp.maximum(wsum[..., None], 1e-9)

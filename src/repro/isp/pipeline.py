@@ -4,8 +4,12 @@ registry in :mod:`repro.isp.stages`.
 The default ordering reproduces the paper's fixed pipeline — exposure ->
 DPC -> MHC demosaic -> AWB -> NLM -> gamma LUT -> YCbCr sharpening —
 but any ordering/subset/extension of registered stages runs through the
-same machinery (``ISPConfig.stages``), and backends ("jnp" | "pallas")
-are resolved per stage through the backend registry.
+same machinery (``ISPConfig.stages``).  Backends: "jnp" and "pallas"
+resolve per stage through the backend registry; "pallas_fused" routes
+the whole ordering through the fusion planner (``repro.isp.fuse``),
+which executes it as a handful of tile-resident megakernel passes —
+the software analogue of the paper's line-buffered single-pass
+datapath (see :func:`plan_summary`).
 
 All parameters are *traced* values: one compiled executable serves every
 control setting — the TPU analogue of the FPGA's run-time
@@ -54,6 +58,16 @@ def control_vector_pipeline(raw, ctrl: jax.Array,
     """NPU control vector in, corrected RGB out — the §VI hot path."""
     cfg = config if config is not None else ISPConfig()
     return run_pipeline(raw, control_to_stage_params(ctrl, cfg.stages), cfg)
+
+
+def plan_summary(config: Optional[ISPConfig] = None) -> str:
+    """Fusion-plan diagram for a pipeline config, e.g. the default's
+    ``[exposure+dpc] [demosaic] [awb*+nlm] [gamma+sharpen]`` — what
+    ``backend="pallas_fused"`` will actually launch (``*`` marks the
+    up-front global-stats pass; ``?`` an unfused opaque stage)."""
+    from repro.isp.fuse import describe_plan     # lazy: planner path only
+    cfg = config if config is not None else ISPConfig()
+    return describe_plan(cfg.stages)
 
 
 def _vmap_pipeline(raws, params, apply_one):

@@ -30,3 +30,15 @@ def apply_saturation(rgb, saturation) -> jax.Array:
     chroma — a rank-1 colour-correction matrix the NPU can steer."""
     lum = jnp.einsum("...c,c->...", rgb, _LUMA)[..., None]
     return jnp.clip(lum + saturation * (rgb - lum), 0.0, 1.0)
+
+
+# Tile-resident form for the fused ISP path: the luma row is an array
+# constant a Pallas kernel cannot close over, so it rides in as a
+# kernel input (``fuse_consts``).  Same op order as apply_saturation —
+# fused and per-stage outputs stay bit-identical.
+CCM_CONSTS = (_LUMA,)
+
+
+def apply_saturation_tile(rgb, p, consts=CCM_CONSTS) -> jax.Array:
+    lum = jnp.einsum("...c,c->...", rgb, consts[0])[..., None]
+    return jnp.clip(lum + p["saturation"] * (rgb - lum), 0.0, 1.0)

@@ -1,0 +1,214 @@
+"""Pallas megakernels for the fused Cognitive-ISP streaming path.
+
+The paper's ISP (§V) is a line-buffered streaming datapath: every pixel
+flows through the whole stage chain in one pass and never revisits
+external memory between stages.  The registry's per-stage backends
+instead launch one whole-image op per stage — O(#stages) HBM round
+trips per frame.  These kernels are the software analogue of the
+FPGA's stream residency: the fusion planner (``repro.isp.fuse``)
+segments a stage ordering, and each segment executes as ONE tiled
+kernel whose VMEM-resident tile runs the entire segment chain before
+touching memory again.
+
+Two kernel shapes cover every segment:
+
+  * ``pointwise_segment_pallas`` — a run of pointwise stages (plus an
+    optional leading reduce-stage *apply*).  Blocked in/out specs; the
+    tile is loaded once, the whole chain applied, the tile stored once.
+  * ``stencil_segment_pallas`` — the same pointwise prologue fused into
+    a stencil stage's halo'd window: the window (``[bh+2r, bw+2r]``) is
+    sliced from the padded frame, the prologue recomputed on the halo
+    (the classic overlapped-tile trade — a few redundant halo pixels
+    instead of a full materialised intermediate), then the stage's
+    ``window_fn`` emits the output tile.
+
+Stage parameters arrive as ONE packed f32 vector (``pvec``) laid out by
+the planner, and global statistics (AWB grey-world gains) as a second
+small vector — both traced values, so a single compiled executable
+serves every NPU control setting (the FPGA reconfigure-without-
+resynthesis discipline).  Halo fill replays each stage's reference
+semantics: ``pad="wrap"`` for ``jnp.roll``-style cyclic references,
+``pad="zero"`` for SAME-conv references, with the zero halo re-asserted
+*after* the prologue so fused output stays bit-identical to running the
+stages one by one.
+
+Like the pre-existing demosaic/NLM kernels, the stencil kernel keeps
+the whole (halo-padded) frame unblocked as its input and carves the
+halo'd window out with an in-kernel ``dynamic_slice`` — fine for the
+frame sizes this repo benches (a 1k x 1k f32 frame is 4 MB < 16 MB
+VMEM) and for interpret mode; frames beyond VMEM want the follow-up of
+an HBM-resident input with per-tile halo DMA.  What the fusion buys is
+the pass count: per segment the frame is read and written ONCE, with
+the whole stage chain applied per tile in between.
+
+Like the other kernels here, ``interpret`` defaults to True for this
+CPU-only container; callers thread ``repro.kernels.ops.INTERPRET``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BH, BW = 128, 128   # default tile; ~128x128x3 f32 tiles sit well in VMEM
+
+
+class ChainStep(NamedTuple):
+    """One fused stage application inside a segment kernel: ``fn`` is
+    the stage's pointwise impl (``(x, params)``; ``(x, params, stats)``
+    for a reduce-stage apply; ``(x, params, consts)`` for a tile_fn
+    that needs array constants), with its params living at
+    ``pvec[offset : offset + len(names)]`` and its constants at
+    ``consts[c_offset : c_offset + n_consts]``."""
+    fn: Callable
+    names: Tuple[str, ...]
+    offset: int
+    uses_stats: bool = False
+    uses_consts: bool = False       # fn is a tile_fn: (x, params, consts)
+    c_offset: int = 0
+    n_consts: int = 0
+
+
+def _step_params(step: ChainStep, pv):
+    return {n: pv[step.offset + k] for k, n in enumerate(step.names)}
+
+
+def _step_consts(step: ChainStep, cv):
+    return tuple(cv[step.c_offset:step.c_offset + step.n_consts])
+
+
+def _apply_chain(x, chain, pv, sv, cv):
+    for step in chain:
+        p = _step_params(step, pv)
+        if step.uses_stats:
+            x = step.fn(x, p, sv)
+        elif step.uses_consts:
+            x = step.fn(x, p, _step_consts(step, cv))
+        else:
+            x = step.fn(x, p)
+    return x
+
+
+def _tile_geometry(H, W, bh, bw):
+    """Clamp the tile to the frame and round the grid up: non-multiple
+    H x W runs with a zero-padded fringe that is cropped after the
+    call (the fringe feeds no valid output pixel)."""
+    bh, bw = min(bh, H), min(bw, W)
+    Hp = -(-H // bh) * bh
+    Wp = -(-W // bw) * bw
+    return bh, bw, Hp, Wp
+
+
+def _full_spec(shape):
+    return pl.BlockSpec(shape, lambda i, j, z=(0,) * len(shape): z)
+
+
+def pointwise_segment_pallas(x, pvec, stats, *, chain: Tuple[ChainStep, ...],
+                             consts: Tuple = (), bh: int = BH, bw: int = BW,
+                             interpret: bool = True):
+    """x: [H, W] or [H, W, C] -> same shape; ``chain`` applied per
+    VMEM-resident tile (one memory pass for the whole pointwise run).
+    ``consts``: array constants chain steps need (kernels cannot close
+    over non-scalar constants, so they ride along as extra inputs)."""
+    H, W = x.shape[:2]
+    tail = x.shape[2:]
+    bh, bw, Hp, Wp = _tile_geometry(H, W, bh, bw)
+    if (Hp, Wp) != (H, W):
+        x = jnp.pad(x, ((0, Hp - H), (0, Wp - W)) + ((0, 0),) * len(tail))
+    consts = tuple(jnp.asarray(c) for c in consts)
+
+    def kernel(x_ref, p_ref, s_ref, *rest):
+        c_refs, o_ref = rest[:-1], rest[-1]
+        cv = tuple(c[...] for c in c_refs)
+        out = _apply_chain(x_ref[...], chain, p_ref[...], s_ref[...], cv)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+    zeros_tail = (0,) * len(tail)
+    block = (bh, bw) + tail
+    out = pl.pallas_call(
+        kernel,
+        grid=(Hp // bh, Wp // bw),
+        in_specs=[pl.BlockSpec(block, lambda i, j: (i, j) + zeros_tail),
+                  pl.BlockSpec(pvec.shape, lambda i, j: (0,)),
+                  pl.BlockSpec(stats.shape, lambda i, j: (0,))]
+                 + [_full_spec(c.shape) for c in consts],
+        out_specs=pl.BlockSpec(block, lambda i, j: (i, j) + zeros_tail),
+        out_shape=jax.ShapeDtypeStruct((Hp, Wp) + tail, x.dtype),
+        interpret=interpret,
+    )(x, pvec, stats, *consts)
+    return out[:H, :W]
+
+
+def stencil_segment_pallas(x, pvec, stats, *,
+                           prologue: Tuple[ChainStep, ...],
+                           window_fn: Callable, wstep: ChainStep,
+                           radius: int, pad: str, out_tail: Tuple[int, ...],
+                           consts: Tuple = (), bh: int = BH, bw: int = BW,
+                           interpret: bool = True):
+    """x: [H, W] or [H, W, C] -> [H, W] + out_tail.  The frame is
+    halo-padded ONCE outside the kernel (``pad="wrap"`` replays the
+    reference's cyclic ``jnp.roll``; ``pad="zero"`` its SAME-conv
+    padding); each grid step slices its ``[bh+2r, bw+2r]`` window,
+    recomputes the pointwise ``prologue`` on it, and hands it to the
+    stage's ``window_fn``.  ``consts``: array constants the window_fn
+    needs (a kernel cannot close over non-scalar constants, so they
+    ride along as extra inputs)."""
+    H, W = x.shape[:2]
+    tail = x.shape[2:]
+    r = radius
+    bh, bw, Hp, Wp = _tile_geometry(H, W, bh, bw)
+    ctail = ((0, 0),) * len(tail)
+    xp = jnp.pad(x, ((r, r), (r, r)) + ctail,
+                 mode="wrap" if pad == "wrap" else "constant")
+    if (Hp, Wp) != (H, W):
+        # zero fringe beyond the halo'd frame: it only ever feeds the
+        # cropped fringe of the output
+        xp = jnp.pad(xp, ((0, Hp - H), (0, Wp - W)) + ctail)
+    zero_mask = pad == "zero" and bool(prologue)
+    consts = tuple(jnp.asarray(c) for c in consts)
+
+    def kernel(x_ref, p_ref, s_ref, *rest):
+        c_refs, o_ref = rest[:-1], rest[-1]
+        cv = tuple(c[...] for c in c_refs)
+        i, j = pl.program_id(0), pl.program_id(1)
+        y0, x0 = i * bh, j * bw
+        win = jax.lax.dynamic_slice(
+            x_ref[...], (y0, x0) + (0,) * len(tail),
+            (bh + 2 * r, bw + 2 * r) + tail)
+        pv, sv = p_ref[...], s_ref[...]
+        if prologue:
+            win = _apply_chain(win, prologue, pv, sv, cv)
+        if zero_mask:
+            # re-assert the zero halo AFTER the prologue: the per-stage
+            # path zero-pads the prologue's OUTPUT, so halo pixels must
+            # read 0, not prologue(0)
+            wshape = (bh + 2 * r, bw + 2 * r)
+            yy = y0 - r + jax.lax.broadcasted_iota(jnp.int32, wshape, 0)
+            xx = x0 - r + jax.lax.broadcasted_iota(jnp.int32, wshape, 1)
+            ok = (yy >= 0) & (yy < H) & (xx >= 0) & (xx < W)
+            ok = ok.reshape(wshape + (1,) * len(tail))
+            win = jnp.where(ok, win, 0.0)
+        ctx = dict(y0=y0, x0=x0, bh=bh, bw=bw)
+        if wstep.n_consts:
+            ctx["consts"] = _step_consts(wstep, cv)
+        tile = window_fn(win, _step_params(wstep, pv), **ctx)
+        o_ref[...] = tile.astype(o_ref.dtype)
+
+    in_zeros = (0,) * (2 + len(tail))
+    out_zeros = (0,) * len(out_tail)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Hp // bh, Wp // bw),
+        in_specs=[pl.BlockSpec(xp.shape, lambda i, j: in_zeros),
+                  pl.BlockSpec(pvec.shape, lambda i, j: (0,)),
+                  pl.BlockSpec(stats.shape, lambda i, j: (0,))]
+                 + [_full_spec(c.shape) for c in consts],
+        out_specs=pl.BlockSpec((bh, bw) + out_tail,
+                               lambda i, j: (i, j) + out_zeros),
+        out_shape=jax.ShapeDtypeStruct((Hp, Wp) + out_tail, x.dtype),
+        interpret=interpret,
+    )(xp, pvec, stats, *consts)
+    return out[:H, :W]

@@ -5,7 +5,9 @@ REPRO_PALLAS_COMPILE=1 to lower natively via Mosaic).
 
 The ISP stage registry's "pallas" backend resolves to ``demosaic_op``
 and ``nlm_op`` here (lazily, from repro.isp.stages, so the pure-jnp
-path never imports Pallas).  The SNN stack's "pallas" backend
+path never imports Pallas), and the "pallas_fused" streaming backend's
+planner (repro.isp.fuse) executes its segments through
+``pointwise_segment_op`` / ``stencil_segment_op``.  The SNN stack's "pallas" backend
 (``SNNConfig.backend``) resolves to ``norm_affine_lif_op`` /
 ``lif_scan_op`` / ``spike_matmul_op`` from repro.core.layers.
 
@@ -29,6 +31,8 @@ import jax.numpy as jnp
 from repro.kernels.demosaic import demosaic_pallas
 from repro.kernels.event_voxel import event_voxel_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.isp_fused import (pointwise_segment_pallas,
+                                     stencil_segment_pallas)
 from repro.kernels.lif_scan import lif_scan_pallas, norm_affine_lif_pallas
 from repro.kernels.nlm import nlm_pallas
 from repro.kernels.spike_matmul import spike_matmul_pallas
@@ -236,6 +240,36 @@ def spike_matmul_op(x, w):
     adjoints — the Heaviside lives upstream in the LIF that produced
     x, so no surrogate is needed here)."""
     return _spike_matmul(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("chain", "bh", "bw"))
+def pointwise_segment_op(x, pvec, stats, consts=(), *, chain,
+                         bh: int = 128, bw: int = 128):
+    """One fused-ISP pointwise segment (a run of contiguous pointwise
+    stages, optionally led by a reduce-stage apply) as ONE tiled
+    kernel pass.  ``chain``: tuple of ``isp_fused.ChainStep`` — a jit
+    static, so each planned segment compiles once and serves every
+    control vector.  ``consts``: traced array constants chain steps
+    need (e.g. the CCM luma row)."""
+    return pointwise_segment_pallas(x, pvec, stats, chain=chain,
+                                    consts=tuple(consts), bh=bh, bw=bw,
+                                    interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "prologue", "window_fn", "wstep", "radius", "pad", "out_tail", "bh",
+    "bw"))
+def stencil_segment_op(x, pvec, stats, consts=(), *, prologue, window_fn,
+                       wstep, radius: int, pad: str, out_tail,
+                       bh: int = 128, bw: int = 128):
+    """One fused-ISP stencil segment: halo'd row/column-tiled kernel
+    with the segment's pointwise prologue recomputed on the halo.
+    ``consts``: traced array constants the window_fn needs (e.g. the
+    MHC filter bank)."""
+    return stencil_segment_pallas(
+        x, pvec, stats, prologue=prologue, window_fn=window_fn,
+        wstep=wstep, radius=radius, pad=pad, out_tail=out_tail,
+        consts=tuple(consts), bh=bh, bw=bw, interpret=INTERPRET)
 
 
 @jax.jit

@@ -45,11 +45,17 @@ is a constructor argument, not a code change.  Likewise the ingestion
 policy (voxel mode, boundary-timestamp handling, FIFO depth, jnp vs
 Pallas voxelizer) is an ``EncodingConfig``, and the NPU layer backend
 (jnp vs the fused Pallas kernels) is the ``SNNConfig.backend`` field.
+The ISP half of the tick goes stream-resident the same way:
+``ISPConfig(backend="pallas_fused")`` (registry name "fused") routes
+the vmapped per-slot pipeline through the fusion planner's tile-
+resident megakernels (repro.isp.fuse) inside the SAME tick executable
+— identical ``PerceptionResult``s, O(#segments) memory passes.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Dict, List, NamedTuple, Optional
 
 import jax
@@ -62,6 +68,7 @@ from repro.core.encoding import (EventStream, events_to_voxel_batch,
 from repro.core.npu import npu_forward
 from repro.isp.pipeline import (control_vector_pipeline,
                                 legacy_control_permutation)
+from repro.isp.stages import BACKENDS as ISP_BACKENDS
 from repro.isp.stages import control_to_stage_params
 
 
@@ -107,6 +114,11 @@ class CognitiveEngine:
         if self.enc_cfg.backend not in ("jnp", "pallas"):
             raise ValueError(f"unknown encoding backend "
                              f"{self.enc_cfg.backend!r}")
+        # fail fast at construction rather than at the first tick trace
+        if self.isp_cfg.backend not in ISP_BACKENDS:
+            raise ValueError(
+                f"unknown ISP backend {self.isp_cfg.backend!r}; "
+                f"registered: {ISP_BACKENDS}")
         self.batch = batch
         H, W = frame_hw if frame_hw is not None else (cfg.height, cfg.width)
         # HOST-side staging slot buffers: submits memcpy into them, the
@@ -126,6 +138,7 @@ class CognitiveEngine:
         self.from_events = np.zeros((batch,), bool)
         self.active: List[Optional[PerceptionRequest]] = [None] * batch
         self.ticks = 0
+        self.last_tick_s = 0.0      # wall time of the latest tick()
 
         if control_order not in ("pipeline", "legacy"):
             raise ValueError(f"control_order must be 'pipeline' or "
@@ -247,6 +260,7 @@ class CognitiveEngine:
         and recycles their slots."""
         if not any(r is not None for r in self.active):
             return []
+        t0 = time.perf_counter()
         # ONE host->device upload of the whole staging area per tick
         # (asserted by the dispatch-counting test); the donated buffers
         # are consumed by the step executable
@@ -257,6 +271,7 @@ class CognitiveEngine:
         # ONE batched device->host fetch of the whole output pytree;
         # per-request results below are numpy views into it
         out, rgb, sp = jax.device_get((out, rgb, sp))
+        self.last_tick_s = time.perf_counter() - t0
         self.ticks += 1
         finished: List[PerceptionRequest] = []
         for i, r in enumerate(self.active):

@@ -321,6 +321,39 @@ def test_engine_with_pallas_npu_backend_matches_jnp(setup):
                                       np.asarray(b.result.control))
 
 
+def test_engine_with_fused_isp_backend_matches_jnp(setup):
+    """ISPConfig(backend="pallas_fused") — the fusion-planned
+    streaming ISP — serves through the engine with identical
+    ``PerceptionResult``s: bit-equal controls/predictions/stage params
+    (the NPU half is untouched) and RGB within the fused path's NLM
+    tolerance (see tests/test_isp_fused.py)."""
+    cfg, params = setup
+    reqs_j = _requests(cfg, 3, seed=13)
+    reqs_f = _requests(cfg, 3, seed=13)
+    eng_j = CognitiveEngine(params, cfg, batch=2)
+    eng_f = CognitiveEngine(params, cfg, get_isp_config("fused"), batch=2)
+    done_j = sorted(eng_j.run_to_completion(reqs_j), key=lambda r: r.rid)
+    done_f = sorted(eng_f.run_to_completion(reqs_f), key=lambda r: r.rid)
+    assert len(done_f) == len(done_j) == 3
+    for a, b in zip(done_f, done_j):
+        np.testing.assert_array_equal(np.asarray(a.result.control),
+                                      np.asarray(b.result.control))
+        np.testing.assert_array_equal(np.asarray(a.result.raw_pred),
+                                      np.asarray(b.result.raw_pred))
+        np.testing.assert_allclose(np.asarray(a.result.rgb),
+                                   np.asarray(b.result.rgb), atol=1e-6)
+        for s, d in a.result.stage_params.items():
+            for k, v in d.items():
+                np.testing.assert_array_equal(
+                    np.asarray(v), np.asarray(b.result.stage_params[s][k]))
+    # the fused engine keeps the single-executable discipline
+    assert eng_f._step._cache_size() == 1
+
+    # unregistered ISP backends are rejected at construction
+    with pytest.raises(ValueError, match="unknown ISP backend"):
+        CognitiveEngine(params, cfg, ISPConfig(backend="no_such"))
+
+
 def test_cognitive_step_shim_still_works(setup):
     cfg, params = setup
     scene = make_scene_batch(jax.random.PRNGKey(9), batch=2,

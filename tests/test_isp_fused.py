@@ -1,0 +1,275 @@
+"""Fused-ISP tests: planner segmentation, fused-vs-per-stage parity
+across the named pipelines (including non-tile-multiple frames and a
+control-vector fuzz), single-executable caching, and the opaque
+fallback for unannotated custom stages.
+
+Tolerance discipline (as in test_lif_backend.py): bitwise equality
+wherever the two paths run identical op chains — which is every stage
+except NLM, whose ``exp``/constant-division lower differently inside an
+interpret-mode Pallas kernel than in plain XLA — and a tight
+``atol=1e-6`` for NLM-bearing pipelines (the per-stage "pallas"
+backend's own parity tests allow 1e-5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import DEFAULT_ISP_STAGES, ISPConfig
+from repro.configs.registry import get_isp_config
+from repro.isp.fuse import (Segment, describe_plan, memory_passes,
+                            plan_stages, run_fused_stages)
+from repro.isp.pipeline import plan_summary
+from repro.isp.stages import (STAGES, ParamSpec, control_dim_for,
+                              control_to_stage_params,
+                              default_stage_params, register_stage,
+                              run_stages)
+
+RNG = np.random.default_rng(7)
+
+NAMED = ("default", "hdr", "fast_preview")
+# fast_preview has no NLM -> the fused path is bitwise-identical there
+ATOL = {"default": 1e-6, "hdr": 1e-6, "fast_preview": 0.0}
+
+
+def _raw(h=64, w=64):
+    return jnp.asarray(RNG.random((h, w)).astype(np.float32))
+
+
+def _jit_pipeline(stages, backend):
+    return jax.jit(lambda r, p: run_stages(r, p, stages, backend))
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_default_plan_segments():
+    plan = plan_stages(DEFAULT_ISP_STAGES)
+    assert plan == (
+        Segment(pointwise=("exposure",), stencil="dpc"),
+        Segment(stencil="demosaic"),
+        Segment(reduce="awb", stencil="nlm"),
+        Segment(pointwise=("gamma",), stencil="sharpen"))
+    # 4 kernel launches + 1 stats pass, vs 7 per-stage passes
+    assert memory_passes(DEFAULT_ISP_STAGES) == 5 < len(DEFAULT_ISP_STAGES)
+    assert describe_plan(DEFAULT_ISP_STAGES) == \
+        "[exposure+dpc] [demosaic] [awb*+nlm] [gamma+sharpen]"
+    assert plan_summary(ISPConfig()) == describe_plan(DEFAULT_ISP_STAGES)
+
+
+def test_hdr_plan_collapses_pointwise_tail():
+    """The hdr ordering's 4-stage pointwise tail (tonemap, ccm, gamma
+    + terminal sharpen stencil) fuses into ONE kernel: 9 stages, still
+    4 launches."""
+    plan = plan_stages(get_isp_config("hdr").stages)
+    assert len(plan) == 4
+    assert plan[-1] == Segment(pointwise=("tonemap", "ccm", "gamma"),
+                               stencil="sharpen")
+
+
+def test_fast_preview_plan_reduce_leads_trailing_segment():
+    plan = plan_stages(get_isp_config("fast_preview").stages)
+    assert plan == (
+        Segment(pointwise=("exposure",), stencil="dpc"),
+        Segment(stencil="demosaic"),
+        Segment(reduce="awb", pointwise=("gamma",)))
+
+
+def test_reduce_stage_always_starts_its_segment():
+    """A reduce stage mid-run cuts the segment: its grey-world stats
+    need the MATERIALISED input, not a fused intermediate."""
+    plan = plan_stages(("demosaic", "tonemap", "awb", "ccm"))
+    assert plan == (Segment(stencil="demosaic"),
+                    Segment(pointwise=("tonemap",)),
+                    Segment(reduce="awb", pointwise=("ccm",)))
+
+
+def test_plan_cache_reuses_segments():
+    assert plan_stages(DEFAULT_ISP_STAGES) is plan_stages(
+        tuple(DEFAULT_ISP_STAGES))
+
+
+# ---------------------------------------------------------------------------
+# fused vs per-stage parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", NAMED)
+def test_fused_matches_per_stage_named_pipelines(name):
+    cfg = get_isp_config(name)
+    raw = _raw()
+    for ctrl_val in (None, 0.2, 0.85):
+        sp = default_stage_params(cfg.stages) if ctrl_val is None else \
+            control_to_stage_params(
+                jnp.full((control_dim_for(cfg.stages),), ctrl_val),
+                cfg.stages)
+        ref = _jit_pipeline(cfg.stages, "jnp")(raw, sp)
+        out = _jit_pipeline(cfg.stages, "pallas_fused")(raw, sp)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=ATOL[name])
+
+
+def test_fused_bitwise_outside_nlm():
+    """Every fused stage except NLM replays the reference op-for-op:
+    the NLM-free prefix of the default pipeline is bitwise-identical."""
+    stages = ("exposure", "dpc", "demosaic", "awb")
+    raw = _raw()
+    sp = default_stage_params(stages)
+    ref = _jit_pipeline(stages, "jnp")(raw, sp)
+    out = _jit_pipeline(stages, "pallas_fused")(raw, sp)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("hw", [(48, 40), (50, 66)])
+def test_fused_non_tile_multiple_frames(hw):
+    """Ragged tiling: 16x16 blocks over frames that are not block
+    multiples (the padded fringe must never leak into valid pixels)."""
+    raw = _raw(*hw)
+    for name in NAMED:
+        cfg = get_isp_config(name)
+        sp = default_stage_params(cfg.stages)
+        ref = _jit_pipeline(cfg.stages, "jnp")(raw, sp)
+        out = jax.jit(lambda r, p, s=cfg.stages: run_fused_stages(
+            r, p, s, block=(16, 16)))(raw, sp)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=ATOL[name])
+
+
+def test_fused_batch_vmap_matches():
+    """The engine's vmapped tick shape: batched frames, per-sample
+    control vectors, one fused executable."""
+    cfg = get_isp_config("hdr")
+    raws = jnp.asarray(RNG.random((3, 32, 32)).astype(np.float32))
+    ctrls = jnp.asarray(
+        RNG.random((3, control_dim_for(cfg.stages))).astype(np.float32))
+
+    def one(backend):
+        return jax.jit(jax.vmap(lambda r, c: run_stages(
+            r, control_to_stage_params(c, cfg.stages), cfg.stages,
+            backend)))
+    ref = one("jnp")(raws, ctrls)
+    out = one("pallas_fused")(raws, ctrls)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-6)
+
+
+def test_fused_single_executable_many_controls():
+    """One compiled executable per stage ordering — NPU control vectors
+    reconfigure the fused datapath without retrace."""
+    cfg = get_isp_config("default")
+    raw = _raw(32, 32)
+    fn = _jit_pipeline(cfg.stages, "pallas_fused")
+    o1 = fn(raw, control_to_stage_params(jnp.full((8,), 0.2), cfg.stages))
+    o2 = fn(raw, control_to_stage_params(jnp.full((8,), 0.9), cfg.stages))
+    assert fn._cache_size() == 1
+    assert not np.allclose(o1, o2)
+
+
+# ---------------------------------------------------------------------------
+# custom stages: fused when annotated, opaque fallback otherwise
+# ---------------------------------------------------------------------------
+
+def test_custom_pointwise_stage_fuses():
+    def invert(x, p):
+        return p["amount"] * (1.0 - x) + (1.0 - p["amount"]) * x
+
+    register_stage("test_fused_invert",
+                   (ParamSpec("amount", 0.0, 1.0, 1.0),), invert,
+                   kind="pointwise")
+    try:
+        stages = get_isp_config("fast_preview").stages + \
+            ("test_fused_invert",)
+        # joins the trailing [awb*+gamma] run instead of a new segment
+        assert plan_stages(stages)[-1].pointwise == ("gamma",
+                                                     "test_fused_invert")
+        raw = _raw(32, 32)
+        sp = default_stage_params(stages)
+        ref = _jit_pipeline(stages, "jnp")(raw, sp)
+        out = _jit_pipeline(stages, "pallas_fused")(raw, sp)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    finally:
+        del STAGES["test_fused_invert"]
+
+
+def test_unannotated_custom_stage_runs_opaque():
+    def posterize(x, p):
+        return jnp.round(x * 4.0) / 4.0
+
+    register_stage("test_opaque_posterize", (), posterize)   # no kind
+    try:
+        stages = get_isp_config("fast_preview").stages + \
+            ("test_opaque_posterize",)
+        plan = plan_stages(stages)
+        assert plan[-1] == Segment(opaque="test_opaque_posterize")
+        assert "[test_opaque_posterize?]" in describe_plan(stages)
+        raw = _raw(32, 32)
+        sp = default_stage_params(stages)
+        ref = _jit_pipeline(stages, "jnp")(raw, sp)
+        out = _jit_pipeline(stages, "pallas_fused")(raw, sp)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    finally:
+        del STAGES["test_opaque_posterize"]
+
+
+def test_bad_fusion_metadata_rejected():
+    with pytest.raises(ValueError, match="unknown fusion kind"):
+        register_stage("test_bad_kind", (), lambda x, p: x, kind="magic")
+    with pytest.raises(ValueError, match="needs window_fn"):
+        register_stage("test_bad_stencil", (), lambda x, p: x,
+                       kind="stencil")
+    with pytest.raises(ValueError, match="needs stats_fn"):
+        register_stage("test_bad_reduce", (), lambda x, p: x,
+                       kind="reduce")
+    with pytest.raises(ValueError, match="no\\s+tile_fn"):
+        register_stage("test_bad_consts", (), lambda x, p: x,
+                       kind="pointwise",
+                       fuse_consts=(np.ones(3, np.float32),))
+    assert not any(n.startswith("test_bad_") for n in STAGES)
+
+
+def test_register_stage_impl_does_not_alias_replaced_stage():
+    """Satellite regression: attaching a backend impl must rebuild the
+    frozen Stage, not mutate the impls dict a saved reference shares."""
+    from repro.isp.stages import register_stage_impl
+    nlm_before = STAGES["nlm"]
+    register_stage_impl("nlm", "test_backend", lambda x, p: x)
+    try:
+        assert "test_backend" in STAGES["nlm"].impls
+        # the previously held Stage object is untouched
+        assert "test_backend" not in nlm_before.impls
+        assert STAGES["nlm"] is not nlm_before
+    finally:
+        STAGES["nlm"] = nlm_before
+        from repro.isp.stages import BACKENDS
+        BACKENDS.remove("test_backend")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis fuzz over control vectors
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _FUZZ_STAGES = get_isp_config("hdr").stages
+    _FUZZ_DIM = control_dim_for(_FUZZ_STAGES)
+    _FUZZ_RAW = jnp.asarray(
+        np.random.default_rng(3).random((32, 32)).astype(np.float32))
+    # jit once, reuse across examples (both paths: one executable
+    # serves every control vector)
+    _FUZZ_REF = _jit_pipeline(_FUZZ_STAGES, "jnp")
+    _FUZZ_FUSED = _jit_pipeline(_FUZZ_STAGES, "pallas_fused")
+
+    @settings(max_examples=20, deadline=None)
+    @given(ctrl=st.lists(st.floats(0.0, 1.0), min_size=_FUZZ_DIM,
+                         max_size=_FUZZ_DIM))
+    def test_fuzz_control_vectors_fused_parity(ctrl):
+        sp = control_to_stage_params(
+            jnp.asarray(ctrl, jnp.float32), _FUZZ_STAGES)
+        ref = _FUZZ_REF(_FUZZ_RAW, sp)
+        out = _FUZZ_FUSED(_FUZZ_RAW, sp)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-6)

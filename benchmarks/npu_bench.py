@@ -8,6 +8,12 @@ dense matmul), every backbone, and the engine submit->result tick under
 both ``SNNConfig.backend`` settings.  On this CPU container the pallas
 rows run in interpret mode, so they are correctness/roofline anchors,
 not speed claims — flip REPRO_PALLAS_COMPILE=1 on TPU for real numbers.
+
+The sparse-conv sweep (``_sparse_conv_sweep``) is the exception: it
+compares the SAME interpreted kernel dense vs activity-gated across
+DVS scenarios, so its speedup RATIOS measure what the occupancy mask
+buys at each sparsity level (the ISSUE 5 acceptance axis), with the
+achieved im2col tile-skip fraction in every row.
 """
 from __future__ import annotations
 
@@ -27,6 +33,73 @@ from repro.core.npu import init_npu, npu_forward
 from repro.data.synthetic import (SCENARIOS, make_scenario_batch,
                                   make_scene_batch)
 from repro.serve.cognitive_engine import CognitiveEngine, PerceptionRequest
+
+
+def _sparse_conv_sweep(emit):
+    """Dense vs activity-gated spike-conv, parameterized by DVS
+    scenario: moving_bar (clean ego-motion -> high sparsity), flicker
+    (night point source -> extreme sparsity), noise_burst (rain storm
+    -> ~79% zero voxels at this shape but spatially INCOHERENT, so ~0
+    skippable tiles).  Each gated row reports the achieved im2col tile-skip
+    fraction next to two speedups, so sparsity is a charted
+    performance axis:
+
+      x...    wall-clock ratio vs the SAME kernel ungated (interpret
+              mode executes the pl.when, so skipped tiles skip their
+              dot — but the interpreter's per-grid-step overhead, a
+              cost that does not exist compiled, caps the measurable
+              win; interleaved min-of-reps timing keeps it stable)
+      mxu...  MXU-pass ratio: dense k-tile dots issued / gated dots
+              issued = 1/(1-skip), deterministic from the occupancy
+              mask of the real scenario data — the roofline-anchored
+              speedup a compiled TPU kernel is bounded by (flip
+              REPRO_PALLAS_COMPILE=1 on TPU for compiled wall times).
+
+    The jnp rows anchor the pure-XLA reference conv on the same data.
+    """
+    from repro.core.layers import init_spiking_conv, spike_conv_jnp
+    from repro.kernels.ops import spike_conv_op, spike_conv_tile_skip
+
+    # 32x32, T=3, batch 2: a 128-row patch-matrix tile spans 4 image
+    # rows, fine enough that scene structure decides tile occupancy,
+    # and small enough that the interpreter's per-step overhead stays
+    # comparable to the per-tile dot.  The horizontal noise-free bar
+    # keeps activity in a coherent row band; the slow-flicker point
+    # source leaves most (frame, time-bin) slabs fully silent (>=0.9
+    # skip — the CI-asserted regime).
+    H, W, T, B, N_EV = 32, 32, 3, 2, 2048
+    p = init_spiking_conv(jax.random.PRNGKey(0), 2, 16)
+    scen_kw = {"moving_bar": dict(noise_frac=0.0, vertical=False,
+                                  speed=0.25, bar_width=0.05),
+               "flicker": dict(flicker_hz=0.5, source_radius=0.01),
+               "noise_burst": {}}
+    reps = smoke_reps(9, 7)    # min-of-reps needs >1 even under smoke
+    for name, kw in scen_kw.items():
+        evs = make_scenario_batch(name, jax.random.PRNGKey(2), B,
+                                  height=H, width=W, n_events=N_EV, **kw)
+        vox = events_to_voxel_batch(evs, time_steps=T, height=H, width=W)
+        # fold [B, T, H, W, 2] -> [B*T, H, W, 2] (the conv layout)
+        xf = vox.reshape(-1, H, W, 2)
+        skip = float(spike_conv_tile_skip(xf, p["w"]))
+        mxu = 1.0 / max(1.0 - skip, 1e-9)
+        t_jnp = time_us(jax.jit(lambda x, w: spike_conv_jnp(x, w)),
+                        xf, p["w"])
+        emit(f"spike_conv_{name}_jnp", t_jnp, f"skip{skip:.2f}")
+        fd = lambda x: spike_conv_op(x, p["w"], gate="none")
+        fg = lambda x: spike_conv_op(x, p["w"], gate="mask")
+        fd(xf), fg(xf)                     # warm both executables
+        td = tg = float("inf")
+        for _ in range(reps):              # interleaved min: the two
+            t0 = time.perf_counter()       # paths see the same noise
+            jax.block_until_ready(fd(xf))
+            td = min(td, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(fg(xf))
+            tg = min(tg, time.perf_counter() - t0)
+        emit(f"spike_conv_{name}_dense_pallas", td * 1e6,
+             "skip0.00_mxu1.0")
+        emit(f"spike_conv_{name}_gated_pallas", tg * 1e6,
+             f"skip{skip:.2f}_x{td / tg:.2f}_mxu{mxu:.1f}")
 
 
 def _backend_sweep(emit, rng):
@@ -50,7 +123,9 @@ def _backend_sweep(emit, rng):
     t_p = time_us(spike_matmul_op, x, w, reps=2)
     emit(f"dense_{M}x{K}x{Nw}_pallas", t_p, "d0.1_tile_skip")
 
-    # per backbone: full npu_forward under both backends
+    # per backbone: full npu_forward under both backends; the tape
+    # rides in the SAME jit'd forward (collect_sparsity), so every row
+    # reports the achieved network sparsity next to its time
     for name in SNN_ARCHS:
         for backend in ("jnp", "pallas"):
             cfg = reduced_snn(name, backend=backend)
@@ -58,9 +133,11 @@ def _backend_sweep(emit, rng):
             vox = jnp.asarray(
                 (rng.random((cfg.time_steps, 2, cfg.height, cfg.width,
                              cfg.in_channels)) < 0.1).astype(np.float32))
-            fwd = jax.jit(lambda p, v, c=cfg: npu_forward(p, v, c))
+            fwd = jax.jit(lambda p, v, c=cfg: npu_forward(
+                p, v, c, collect_sparsity=True))
             t = time_us(fwd, params, vox, reps=2)
-            emit(f"npu_fwd_{name}_{backend}", t, "batch2")
+            sp = float(fwd(params, vox).layer_rates["network_sparsity"])
+            emit(f"npu_fwd_{name}_{backend}", t, f"batch2_sp{sp:.3f}")
 
 
 def _engine_tick_sweep(emit, rng):
@@ -127,6 +204,9 @@ def run(emit):
     # backend sweep: jnp vs pallas per layer kind / backbone / engine
     _backend_sweep(emit, rng)
     _engine_tick_sweep(emit, rng)
+
+    # dense vs activity-gated spike-conv across sparsity regimes
+    _sparse_conv_sweep(emit)
 
     # ingestion sweep: events/sec per DVS scenario x voxelizer backend
     # (jnp scatter vs the Pallas event_voxel kernel; interpret mode on

@@ -1,7 +1,9 @@
 """The paper's four spiking backbones (§IV-C), built from spiking layers.
 
 All take a voxel grid [T, B, H, W, 2] and return features
-[T, B, H/2^stages, W/2^stages, C_out].
+[T, B, H/2^stages, W/2^stages, C_out]; an optional ``tape``
+(repro.core.sparsity.SparsityTape) records per-layer spike rates
+inside the same traced forward (npu_forward's ``collect_sparsity``).
 """
 from __future__ import annotations
 
@@ -32,10 +34,12 @@ def init_vgg(rng, cfg: SNNConfig):
     return params
 
 
-def apply_vgg(p, x, cfg: SNNConfig):
+def apply_vgg(p, x, cfg: SNNConfig, tape=None):
     for i in range(cfg.num_stages):
-        x = apply_spiking_conv(p[f"s{i}_a"], x, cfg)
-        x = apply_spiking_conv(p[f"s{i}_b"], x, cfg)
+        x = apply_spiking_conv(p[f"s{i}_a"], x, cfg, tape=tape,
+                               tag=f"s{i}_a")
+        x = apply_spiking_conv(p[f"s{i}_b"], x, cfg, tape=tape,
+                               tag=f"s{i}_b")
         x = max_pool(x)
     return x
 
@@ -60,15 +64,18 @@ def init_densenet(rng, cfg: SNNConfig, layers_per_block: int = 3):
     return params
 
 
-def apply_densenet(p, x, cfg: SNNConfig, layers_per_block: int = 3):
-    x = apply_spiking_conv(p["stem"], x, cfg)
+def apply_densenet(p, x, cfg: SNNConfig, layers_per_block: int = 3,
+                   tape=None):
+    x = apply_spiking_conv(p["stem"], x, cfg, tape=tape, tag="stem")
     for s in range(cfg.num_stages):
         feats = [x]
         for l in range(layers_per_block):
             inp = jnp.concatenate(feats, axis=-1)
-            feats.append(apply_spiking_conv(p[f"b{s}_l{l}"], inp, cfg))
+            feats.append(apply_spiking_conv(p[f"b{s}_l{l}"], inp, cfg,
+                                            tape=tape, tag=f"b{s}_l{l}"))
         x = jnp.concatenate(feats, axis=-1)
-        x = apply_spiking_conv(p[f"t{s}"], x, cfg)   # 1x1 transition
+        # 1x1 transition
+        x = apply_spiking_conv(p[f"t{s}"], x, cfg, tape=tape, tag=f"t{s}")
         x = max_pool(x)
     return x
 
@@ -89,11 +96,13 @@ def init_mobilenet(rng, cfg: SNNConfig):
     return params
 
 
-def apply_mobilenet(p, x, cfg: SNNConfig):
-    x = apply_spiking_conv(p["stem"], x, cfg)
+def apply_mobilenet(p, x, cfg: SNNConfig, tape=None):
+    x = apply_spiking_conv(p["stem"], x, cfg, tape=tape, tag="stem")
     for i in range(cfg.num_stages):
-        x = apply_spiking_conv(p[f"dw{i}"], x, cfg, stride=2, depthwise=True)
-        x = apply_spiking_conv(p[f"pw{i}"], x, cfg)
+        x = apply_spiking_conv(p[f"dw{i}"], x, cfg, stride=2,
+                               depthwise=True, tape=tape, tag=f"dw{i}")
+        x = apply_spiking_conv(p[f"pw{i}"], x, cfg, tape=tape,
+                               tag=f"pw{i}")
     return x
 
 
@@ -112,10 +121,11 @@ def init_yolo_backbone(rng, cfg: SNNConfig):
     return params
 
 
-def apply_yolo_backbone(p, x, cfg: SNNConfig):
+def apply_yolo_backbone(p, x, cfg: SNNConfig, tape=None):
     for i in range(cfg.num_stages):
-        x = apply_spiking_conv(p[f"d{i}"], x, cfg, stride=2)
-        x = apply_spiking_conv(p[f"f{i}"], x, cfg)
+        x = apply_spiking_conv(p[f"d{i}"], x, cfg, stride=2, tape=tape,
+                               tag=f"d{i}")
+        x = apply_spiking_conv(p[f"f{i}"], x, cfg, tape=tape, tag=f"f{i}")
     return x
 
 

@@ -9,7 +9,7 @@ profile.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from repro.configs.base import ISPConfig, SNNConfig
 from repro.core.backbones import BACKBONES, backbone_out_channels
 from repro.core.layers import (apply_spiking_dense, init_spiking_dense)
-from repro.core.sparsity import activity_sparsity, tile_skip_fraction
+from repro.core.sparsity import (SparsityTape, activity_sparsity,
+                                 tile_skip_fraction)
 from repro.core.yolo import apply_yolo_head, init_yolo_head
 
 
@@ -26,6 +27,11 @@ class NPUOutput(NamedTuple):
     control: jax.Array         # [B, control_dim] in [0, 1]
     sparsity: jax.Array        # scalar: network activity sparsity
     tile_skip: jax.Array       # scalar: TPU tile-skip fraction
+    # per-layer firing rates + "network_sparsity", recorded by the
+    # SparsityTape inside the SAME jit'd forward when the caller asks
+    # for them (npu_forward(..., collect_sparsity=True)); None
+    # otherwise, so the default executable carries no extra outputs
+    layer_rates: Optional[Dict[str, jax.Array]] = None
 
 
 def configure_for_isp(cfg: SNNConfig, isp_cfg: ISPConfig,
@@ -52,13 +58,24 @@ def init_npu(rng, cfg: SNNConfig) -> Dict[str, Any]:
     return p
 
 
-def npu_forward(params, voxels, cfg: SNNConfig) -> NPUOutput:
-    """voxels: [T, B, H, W, 2] (from repro.core.encoding)."""
+def npu_forward(params, voxels, cfg: SNNConfig, *,
+                collect_sparsity: bool = False) -> NPUOutput:
+    """voxels: [T, B, H, W, 2] (from repro.core.encoding).
+
+    ``collect_sparsity``: thread a SparsityTape through every spiking
+    layer so per-layer firing rates (plus the derived
+    "network_sparsity") come out of the same jit'd forward on
+    ``NPUOutput.layer_rates`` — no second measurement pass.  Static
+    under jit (it changes the output pytree), so flipping it compiles
+    a second executable.
+    """
+    tape = SparsityTape() if collect_sparsity else None
     _, apply_bb = BACKBONES[cfg.backbone]
-    feats = apply_bb(params["backbone"], voxels, cfg)  # [T,B,h,w,C]
+    feats = apply_bb(params["backbone"], voxels, cfg,
+                     tape=tape)                        # [T,B,h,w,C]
 
     if cfg.detect:
-        raw = apply_yolo_head(params["head"], feats, cfg)
+        raw = apply_yolo_head(params["head"], feats, cfg, tape=tape)
     else:
         pooled_t = jnp.mean(feats, axis=(2, 3))        # [T,B,C]
         logits = apply_spiking_dense(params["cls"], pooled_t, cfg,
@@ -67,13 +84,19 @@ def npu_forward(params, voxels, cfg: SNNConfig) -> NPUOutput:
 
     # cognitive control head: scene lighting/motion profile -> ISP params
     pooled = jnp.mean(feats, axis=(2, 3))              # [T,B,C]
-    h = apply_spiking_dense(params["ctrl_hidden"], pooled, cfg)
+    h = apply_spiking_dense(params["ctrl_hidden"], pooled, cfg,
+                            tape=tape, tag="ctrl_hidden")
     # h is a 0/1 spike tensor (ctrl_hidden fired), so the pallas
     # backend routes this matmul through the tile-skip spike kernel
     ctrl = apply_spiking_dense(params["ctrl_out"], h, cfg, fire=False,
                                spike_input=True)
     ctrl = jax.nn.sigmoid(jnp.mean(ctrl, axis=0))      # [B, control_dim]
 
+    layer_rates = None
+    if tape is not None:
+        layer_rates = dict(tape.rates(),
+                           network_sparsity=tape.network_sparsity())
     return NPUOutput(raw_pred=raw, control=ctrl,
                      sparsity=activity_sparsity([feats]),
-                     tile_skip=tile_skip_fraction(feats))
+                     tile_skip=tile_skip_fraction(feats),
+                     layer_rates=layer_rates)

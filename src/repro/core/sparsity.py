@@ -10,7 +10,15 @@ import jax.numpy as jnp
 
 
 class SparsityTape:
-    """Collects per-layer spike rates during a forward pass."""
+    """Collects per-layer spike rates during a forward pass.
+
+    jit-safe: ``record`` stores TRACED scalar rates, so the tape can
+    ride inside a jit'd forward (``npu_forward(...,
+    collect_sparsity=True)`` threads one through every spiking layer)
+    and come out as a dict pytree of the same executable — no second
+    measurement pass.  ``rates``/``network_sparsity`` return traced
+    values; ``summary`` concretises to floats (outside jit only).
+    """
 
     def __init__(self):
         self.records: List[Tuple[str, jax.Array]] = []
@@ -18,10 +26,19 @@ class SparsityTape:
     def record(self, name: str, spikes: jax.Array):
         self.records.append((name, jnp.mean(spikes)))
 
+    def rates(self) -> Dict[str, jax.Array]:
+        """Per-layer firing rates, insertion-ordered (traced)."""
+        return dict(self.records)
+
+    def network_sparsity(self) -> jax.Array:
+        """1 - mean firing rate across recorded layers (traced)."""
+        rs = [r for _, r in self.records]
+        return 1.0 - sum(rs) / max(len(rs), 1)
+
     def summary(self) -> Dict[str, float]:
         out = {n: float(r) for n, r in self.records}
         if out:
-            out["network_sparsity"] = 1.0 - sum(out.values()) / len(out)
+            out["network_sparsity"] = float(self.network_sparsity())
         return out
 
 
@@ -34,8 +51,19 @@ def activity_sparsity(spike_tensors: List[jax.Array]) -> jax.Array:
 def tile_skip_fraction(spikes: jax.Array, tile: int = 128) -> jax.Array:
     """Fraction of (flattened) length-`tile` activation tiles that are
     all-zero — the granularity at which the TPU spike_matmul kernel can
-    actually skip MXU work (DESIGN.md §2)."""
+    actually skip MXU work (DESIGN.md §2).
+
+    Non-tile-multiple sizes: the ragged tail counts as one partial
+    tile (zero-padded, exactly as the kernels pad it — so a silent
+    tail is a skippable tile and a live tail is not), rather than
+    being silently dropped; reported fractions are honest for layers
+    whose activation count is not a multiple of ``tile``.  The conv
+    path's im2col-granular equivalent is
+    ``repro.kernels.ops.spike_conv_tile_skip``.
+    """
     flat = spikes.reshape(-1)
-    n = (flat.shape[0] // tile) * tile
-    tiles = flat[:n].reshape(-1, tile)
+    pad = (-flat.shape[0]) % tile
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    tiles = flat.reshape(-1, tile)
     return jnp.mean(jnp.all(tiles == 0, axis=-1).astype(jnp.float32))

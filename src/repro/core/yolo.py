@@ -27,9 +27,10 @@ def init_yolo_head(rng, cin: int, cfg: SNNConfig):
             "pred": init_spiking_conv(k2, cin, nout, kernel=1)}
 
 
-def apply_yolo_head(p, feats, cfg: SNNConfig):
+def apply_yolo_head(p, feats, cfg: SNNConfig, tape=None):
     """feats: [T, B, h, w, C] -> raw predictions [B, h, w, A, 5+nc]."""
-    x = apply_spiking_conv(p["conv"], feats, cfg)
+    x = apply_spiking_conv(p["conv"], feats, cfg, tape=tape,
+                           tag="head_conv")
     x = apply_spiking_conv(p["pred"], x, cfg, fire=False)   # analog readout
     x = jnp.mean(x, axis=0)                                  # rate decode
     B, h, w, _ = x.shape

@@ -8,8 +8,9 @@ and ``nlm_op`` here (lazily, from repro.isp.stages, so the pure-jnp
 path never imports Pallas), and the "pallas_fused" streaming backend's
 planner (repro.isp.fuse) executes its segments through
 ``pointwise_segment_op`` / ``stencil_segment_op``.  The SNN stack's "pallas" backend
-(``SNNConfig.backend``) resolves to ``norm_affine_lif_op`` /
-``lif_scan_op`` / ``spike_matmul_op`` from repro.core.layers.
+(``SNNConfig.backend``) resolves to ``spike_conv_op`` (the activity-
+gated spike-im2col conv) / ``norm_affine_lif_op`` / ``lif_scan_op`` /
+``spike_matmul_op`` from repro.core.layers.
 
 The spiking ops carry a ``jax.custom_vjp`` whose backward implements
 the sigmoid surrogate gradient (BPTT through the LIF recurrence, à la
@@ -28,6 +29,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core.layers import dw_patches, spike_im2col
 from repro.kernels.demosaic import demosaic_pallas
 from repro.kernels.event_voxel import event_voxel_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -35,6 +37,9 @@ from repro.kernels.isp_fused import (pointwise_segment_pallas,
                                      stencil_segment_pallas)
 from repro.kernels.lif_scan import lif_scan_pallas, norm_affine_lif_pallas
 from repro.kernels.nlm import nlm_pallas
+from repro.kernels.spike_conv import (occupancy_mask, spike_conv_pallas,
+                                      spike_dwconv_pallas,
+                                      tap_occupancy_mask)
 from repro.kernels.spike_matmul import spike_matmul_pallas
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
@@ -240,6 +245,112 @@ def spike_matmul_op(x, w):
     adjoints — the Heaviside lives upstream in the LIF that produced
     x, so no surrogate is needed here)."""
     return _spike_matmul(x, w)
+
+
+# ---------------------------------------------------------------------------
+# spike_conv_op: spike-im2col lowering into the activity-gated conv path
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _spike_conv_mm(patches, wmat, gate):
+    if gate == "inline":
+        # route through the existing tile-skip spike matmul (per-tile
+        # jnp.any check inside the kernel)
+        return spike_matmul_pallas(patches, wmat, interpret=INTERPRET)
+    return spike_conv_pallas(patches, wmat, gated=(gate == "mask"),
+                             interpret=INTERPRET)
+
+
+def _spike_conv_mm_fwd(patches, wmat, gate):
+    return _spike_conv_mm(patches, wmat, gate), (patches, wmat)
+
+
+def _spike_conv_mm_bwd(gate, res, g):
+    patches, wmat = res
+    # d/dpatches is dense (g is not a spike tensor); d/dwmat contracts
+    # over the spike patches — as with spike_matmul, the sparsity the
+    # forward gates on lives in the activations, not the adjoints, and
+    # the Heaviside lives upstream in the LIF that produced them, so
+    # both sides are plain MXU matmuls (no surrogate needed HERE; the
+    # conv layer's surrogate-grad BPTT rides in norm_affine_lif_op /
+    # lif_scan_op, which fire on the conv output)
+    return g @ wmat.T, patches.T @ g
+
+
+_spike_conv_mm.defvjp(_spike_conv_mm_fwd, _spike_conv_mm_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _spike_dwconv(patches3, wflat, gate):
+    return spike_dwconv_pallas(patches3, wflat, gated=(gate != "none"),
+                               interpret=INTERPRET)
+
+
+def _spike_dwconv_fwd(patches3, wflat, gate):
+    return _spike_dwconv(patches3, wflat, gate), (patches3, wflat)
+
+
+def _spike_dwconv_bwd(gate, res, g):
+    patches3, wflat = res
+    return g[:, None, :] * wflat[None], \
+        jnp.einsum("mtc,mc->tc", patches3, g)
+
+
+_spike_dwconv.defvjp(_spike_dwconv_fwd, _spike_dwconv_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "depthwise",
+                                             "gate"))
+def spike_conv_op(xf, w, *, stride: int = 1, depthwise: bool = False,
+                  gate: str = "mask"):
+    """Activity-gated spiking conv.  xf: [N, H, W, C] folded spike
+    tensor; w: [kh, kw, cin, cout] HWIO weights (depthwise:
+    [kh, kw, 1, C]) -> [N, Ho, Wo, cout], SAME padding.
+
+    Lowers via spike-im2col (``repro.core.layers.spike_im2col``) into
+    the tile-skip matmul kernels, so every conv kind — normal, strided,
+    depthwise, 1x1 — inherits the event-driven MXU-tile skip.
+    ``gate``: "mask" (per-tile occupancy precomputed once per call —
+    the default the layer dispatch uses), "inline" (the spike_matmul
+    kernel's in-kernel jnp.any check; depthwise has no inline variant
+    and treats it as "mask"), or "none" (dense baseline for the
+    benchmark sweep).  Differentiable: plain matmul adjoints — the
+    surrogate gradient lives in the LIF epilogue downstream.
+
+    Bit-exact vs the jnp reference ``spike_conv_jnp`` (shared K-block /
+    tap-loop formulation) and allclose vs lax.conv SAME."""
+    if gate not in ("mask", "inline", "none"):
+        raise ValueError(f"gate must be 'mask', 'inline' or 'none', "
+                         f"got {gate!r}")
+    kh, kw = w.shape[:2]
+    N = xf.shape[0]
+    if depthwise:
+        patches3, (Ho, Wo) = dw_patches(xf, kh, kw, stride)
+        y = _spike_dwconv(patches3, w.reshape(kh * kw, -1), gate)
+    else:
+        patches, (Ho, Wo) = spike_im2col(xf, kh, kw, stride)
+        y = _spike_conv_mm(patches,
+                           w.reshape(kh * kw * w.shape[2], w.shape[3]),
+                           gate)
+    return y.reshape(N, Ho, Wo, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "depthwise"))
+def spike_conv_tile_skip(xf, w, *, stride: int = 1,
+                         depthwise: bool = False):
+    """Fraction of the gated conv's K-loop tiles whose occupancy bit is
+    clear — the achieved MXU-pass skip rate of ``spike_conv_op`` on
+    this input (benchmark telemetry; reported next to each speedup
+    row).  Same im2col granularity the kernel gates at, unlike the
+    flat-tile ``repro.core.sparsity.tile_skip_fraction``."""
+    kh, kw = w.shape[:2]
+    if depthwise:
+        patches3, _ = dw_patches(xf, kh, kw, stride)
+        occ = tap_occupancy_mask(patches3)
+    else:
+        patches, _ = spike_im2col(xf, kh, kw, stride)
+        occ = occupancy_mask(patches)
+    return jnp.mean((occ == 0).astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("chain", "bh", "bw"))

@@ -43,6 +43,14 @@ def spike_matmul_ref(x, w):
                    w.astype(jnp.float32)).astype(w.dtype)
 
 
+def spike_conv_ref(xf, w, *, stride=1, depthwise=False):
+    """Oracle for the activity-gated spike-conv kernels: the shared
+    K-blocked im2col / tap-loop formulation (bit-exact target; see
+    repro.core.layers.spike_conv_jnp for why the blocking matters)."""
+    from repro.core.layers import spike_conv_jnp
+    return spike_conv_jnp(xf, w, stride=stride, depthwise=depthwise)
+
+
 def demosaic_ref(raw):
     return _demosaic_jnp(raw)
 

@@ -1,0 +1,175 @@
+"""Pallas TPU kernels: activity-gated spike convolution (event-driven
+conv on the MXU via spike-im2col).
+
+The FPGA's event-driven datapath only clocks MAC arrays for neurons
+that actually fired; a systolic MXU cannot gate individual lanes, so —
+as with ``spike_matmul`` — the TPU-native granularity of "silent
+neurons cost nothing" is the VMEM tile.  The conv hot path reaches
+that granularity through spike-im2col: the folded ``[B·T, H, W, C]``
+spike tensor is lowered to a patch matrix ``[B·T·Ho·Wo, kh·kw·C]``
+(see ``repro.core.layers.spike_im2col``) and the conv becomes a tiled
+matmul whose LHS inherits the activation sparsity.
+
+What this module adds over ``spike_matmul``'s inline ``jnp.any`` check:
+the per-tile spike *occupancy mask* is computed ONCE per call (one
+cheap XLA reduction over the patch matrix — the software analogue of
+the event list the FPGA datapath is driven by) and enters the kernel
+as a scalar side input, so every K-step of the matmul grid consults a
+precomputed bit instead of re-reducing its activation tile.  On real
+hardware the same mask can feed a scalar-prefetch grid that skips the
+tile's DMA as well as its MXU pass; in interpret mode the ``pl.when``
+still skips the dot, which is what the dense-vs-gated rows in
+``benchmarks/npu_bench.py`` measure.
+
+Two kernels:
+
+``spike_conv_pallas`` — gated ``patches @ wmat`` for normal / strided /
+1x1 convs (depthwise uses the block-diagonal-free kernel below).
+Grid (M/bm, N/bn, K/bk), fp32 accumulation in VMEM scratch; a K-step
+whose ``occ[i, k]`` bit is clear contributes nothing.
+
+``spike_dwconv_pallas`` — depthwise conv as a gated tap loop: patches
+``[M, taps, C]`` stay in their per-channel form (a block-diagonal
+matmul would waste C× MACs on structural zeros), each program owns a
+row block, and the K-loop over taps skips tap slabs whose occupancy
+bit is clear.  Pure VPU work — depthwise is memory-bound, so the win
+is skipped loads-from-VMEM, not MXU passes.
+
+Bit-exactness contract (tests/test_spike_conv.py): the gated matmul
+accumulates K in ``bk``-sized blocks, so the jnp reference path
+(``repro.core.layers.spike_conv_jnp``) computes the SAME K-blocked
+accumulation — the blocking is the bit-parity contract, exactly like
+the norm reduce shape in ``lif_scan.py``.  A skipped tile's would-be
+contribution is exact zeros, so gating never changes the result.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU tile sizes; bk doubles as the K-block of the jnp
+# reference formulation (repro.core.layers.SPIKE_CONV_BLOCK).
+BM = BK = BN = 128
+
+
+def occupancy_mask(patches, *, bm: int = BM, bk: int = BK):
+    """Per-(row-block, K-block) spike occupancy of a patch matrix:
+    int32 [ceil(M/bm), ceil(K/bk)], 1 where the tile holds at least one
+    live (non-zero) activation.  ONE reduction over the patch matrix,
+    amortised across the whole (M/bm, N/bn, K/bk) matmul grid."""
+    M, K = patches.shape
+    pm, pk = (-M) % bm, (-K) % bk
+    if pm or pk:
+        patches = jnp.pad(patches, ((0, pm), (0, pk)))
+    t = patches.reshape((M + pm) // bm, bm, (K + pk) // bk, bk)
+    return jnp.any(t != 0, axis=(1, 3)).astype(jnp.int32)
+
+
+def tap_occupancy_mask(patches3, *, bm: int = BM):
+    """Depthwise analogue: int32 [ceil(M/bm), taps], 1 where the row
+    block has any live activation under tap t (any channel)."""
+    M, taps, C = patches3.shape
+    pm = (-M) % bm
+    if pm:
+        patches3 = jnp.pad(patches3, ((0, pm), (0, 0), (0, 0)))
+    t = patches3.reshape((M + pm) // bm, bm, taps, C)
+    return jnp.any(t != 0, axis=(1, 3)).astype(jnp.int32)
+
+
+def _conv_kernel(occ_ref, x_ref, w_ref, y_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[0, 0] != 0)          # activity gate: precomputed bit
+    def _mac():
+        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                                w_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def spike_conv_pallas(patches, wmat, *, gated: bool = True, bm: int = BM,
+                      bk: int = BK, bn: int = BN, interpret: bool = True):
+    """patches: [M, K] spike patch matrix, wmat: [K, N] -> patches @ wmat
+    with occupancy-gated K-steps.  ``gated=False`` runs the identical
+    kernel with an all-ones mask — the dense baseline the benchmark
+    sweep compares against."""
+    M, K = patches.shape
+    _, N = wmat.shape
+    pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
+    x = jnp.pad(patches, ((0, pm), (0, pk))) if pm or pk else patches
+    w = jnp.pad(wmat, ((0, pk), (0, pn))) if pk or pn else wmat
+    Mp, Kp, Np = M + pm, K + pk, N + pn
+    k_steps = Kp // bk
+    if gated:
+        occ = occupancy_mask(patches, bm=bm, bk=bk)
+    else:
+        occ = jnp.ones((Mp // bm, k_steps), jnp.int32)
+
+    y = pl.pallas_call(
+        functools.partial(_conv_kernel, k_steps=k_steps),
+        grid=(Mp // bm, Np // bn, k_steps),
+        in_specs=[pl.BlockSpec((1, 1), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), wmat.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(occ, x, w)
+    return y[:M, :N]
+
+
+def _dwconv_kernel(occ_ref, x_ref, w_ref, y_ref, acc_ref, *, taps: int):
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+    for t in range(taps):                  # static K-loop over taps
+
+        @pl.when(occ_ref[0, t] != 0)       # gate: skip silent tap slabs
+        def _mac(t=t):
+            acc_ref[...] += x_ref[:, t, :] * w_ref[t, :]
+
+    y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def spike_dwconv_pallas(patches3, wflat, *, gated: bool = True,
+                        bm: int = BM, lane: int = 128,
+                        interpret: bool = True):
+    """patches3: [M, taps, C] per-channel spike patches, wflat: [taps, C]
+    -> [M, C] depthwise conv output (sum over taps of x[:, t, :] * w[t]).
+    Accumulates taps in the same order as the jnp tap loop
+    (``repro.core.layers.spike_conv_jnp``) — elementwise VPU work, so
+    row/lane blocking cannot perturb bits."""
+    M, taps, C = patches3.shape
+    pm, pc = (-M) % bm, (-C) % lane
+    x = patches3
+    if pm or pc:
+        x = jnp.pad(x, ((0, pm), (0, 0), (0, pc)))
+    w = jnp.pad(wflat, ((0, 0), (0, pc))) if pc else wflat
+    Mp, Cp = M + pm, C + pc
+    if gated:
+        occ = tap_occupancy_mask(patches3, bm=bm)
+    else:
+        occ = jnp.ones((Mp // bm, taps), jnp.int32)
+
+    y = pl.pallas_call(
+        functools.partial(_dwconv_kernel, taps=taps),
+        grid=(Mp // bm,),
+        in_specs=[pl.BlockSpec((1, taps), lambda i: (i, 0)),
+                  pl.BlockSpec((bm, taps, Cp), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((taps, Cp), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, Cp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Cp), wflat.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, Cp), jnp.float32)],
+        interpret=interpret,
+    )(occ, x, w)
+    return y[:M, :C]

@@ -44,7 +44,11 @@ so swapping in a reordered or extended pipeline (e.g. the "hdr" config)
 is a constructor argument, not a code change.  Likewise the ingestion
 policy (voxel mode, boundary-timestamp handling, FIFO depth, jnp vs
 Pallas voxelizer) is an ``EncodingConfig``, and the NPU layer backend
-(jnp vs the fused Pallas kernels) is the ``SNNConfig.backend`` field.
+(jnp vs the fused Pallas kernels, including the activity-gated
+spike-im2col conv path — silent MXU tiles skip their pass inside the
+tick) is the ``SNNConfig.backend`` field.  ``collect_sparsity=True``
+threads the SparsityTape through the tick executable so per-layer
+spike rates ride back on every ``PerceptionResult``.
 The ISP half of the tick goes stream-resident the same way:
 ``ISPConfig(backend="pallas_fused")`` (registry name "fused") routes
 the vmapped per-slot pipeline through the fusion planner's tile-
@@ -77,6 +81,11 @@ class PerceptionResult(NamedTuple):
     control: np.ndarray         # [control_dim] raw NPU control vector
     raw_pred: np.ndarray        # detection head output for this frame
     stage_params: Dict[str, Dict[str, np.ndarray]]
+    # per-layer spike rates + "network_sparsity" for the TICK BATCH
+    # this request rode in (the rates reduce over the whole batch, so
+    # every request finished by one tick shares the dict); populated
+    # when the engine was built with collect_sparsity=True, else None
+    sparsity: Optional[Dict[str, float]] = None
 
 
 @dataclasses.dataclass
@@ -95,12 +104,18 @@ class CognitiveEngine:
                  isp_cfg: Optional[ISPConfig] = None, batch: int = 4,
                  frame_hw: Optional[tuple] = None,
                  control_order: str = "pipeline",
-                 enc_cfg: Optional[EncodingConfig] = None):
+                 enc_cfg: Optional[EncodingConfig] = None,
+                 collect_sparsity: bool = False):
         """``control_order``: how the NPU head's slots are laid out.
         "pipeline" (default) is the registry's derived stage order;
         "legacy" serves heads trained through the ``cognitive_step`` /
         ``control_to_params`` shim (historical hand-picked slot order)
-        by permuting the control vector before range mapping."""
+        by permuting the control vector before range mapping.
+
+        ``collect_sparsity``: thread the SparsityTape through the tick
+        executable so per-layer spike rates come back with every tick
+        (``PerceptionResult.sparsity``) — same jit'd forward, no second
+        pass; the only cost is a handful of extra scalar outputs."""
         self.params = npu_params
         self.cfg = cfg
         self.isp_cfg = isp_cfg if isp_cfg is not None else ISPConfig()
@@ -156,6 +171,7 @@ class CognitiveEngine:
                     f"the legacy slot layout (needs > {max(p)})")
             perm = jnp.asarray(p, jnp.int32)
         icfg, ncfg, ecfg, nd = self.isp_cfg, cfg, self.enc_cfg, need
+        collect = bool(collect_sparsity)
 
         def _encode(events):
             if ecfg.backend == "pallas":
@@ -179,7 +195,8 @@ class CognitiveEngine:
                 enc = _encode(events)
                 voxels = jnp.where(from_events[None, :, None, None, None],
                                    enc, voxels)
-            out = npu_forward(params, voxels, ncfg)
+            out = npu_forward(params, voxels, ncfg,
+                              collect_sparsity=collect)
             ctrl = out.control[:, perm] if perm is not None \
                 else out.control[:, :nd]
             rgb = jax.vmap(
@@ -273,6 +290,11 @@ class CognitiveEngine:
         out, rgb, sp = jax.device_get((out, rgb, sp))
         self.last_tick_s = time.perf_counter() - t0
         self.ticks += 1
+        # batch-level sparsity telemetry (one dict per tick, shared by
+        # every request that rode in it)
+        spars = None
+        if out.layer_rates is not None:
+            spars = {k: float(v) for k, v in out.layer_rates.items()}
         finished: List[PerceptionRequest] = []
         for i, r in enumerate(self.active):
             if r is None:
@@ -280,7 +302,8 @@ class CognitiveEngine:
             r.result = PerceptionResult(
                 rgb=rgb[i], control=out.control[i],
                 raw_pred=out.raw_pred[i],
-                stage_params=jax.tree_util.tree_map(lambda x: x[i], sp))
+                stage_params=jax.tree_util.tree_map(lambda x: x[i], sp),
+                sparsity=spars)
             finished.append(r)
             self.active[i] = None
         return finished

@@ -1,0 +1,110 @@
+"""Compare two BENCH_<n>.json logs and fail on wall-clock regressions.
+
+``python benchmarks/bench_diff.py OLD.json NEW.json [--tol 1.5]``
+exits nonzero listing every row whose us_per_call grew by more than
+``tol``x between the runs — the guard the CI bench-smoke lane runs on
+consecutive artifacts so a PR can't silently slow a benched path.
+
+Rules of the comparison:
+
+* only rows present in BOTH files are compared (new benches appear and
+  old ones retire across PRs; that is growth, not regression);
+* rows under ``--min-us`` (default 50us) in BOTH runs are skipped —
+  at CPU-timer granularity a 2us -> 5us flip is noise, not signal;
+* rows at exactly 0.0 in the OLD run are skipped (a zero baseline has
+  no meaningful ratio; the dead tile-skip rows of PRs 3-5 read 0.000);
+* improvements are reported but never fail.
+
+``--selftest`` fabricates a regression in-memory and asserts the
+comparator flags it (and that an identity diff passes) — so the CI
+lane proves the guard can actually fire before trusting its exit 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc.get("rows", [])
+    if not isinstance(rows, list) or not rows:
+        raise SystemExit(f"{path}: no rows (is this a BENCH_<n>.json?)")
+    return {r["name"]: float(r["us_per_call"]) for r in rows}
+
+
+def diff(old: dict, new: dict, tol: float, min_us: float):
+    """Returns (regressions, improvements, compared) lists of
+    (name, old_us, new_us, ratio)."""
+    regressions, improvements, compared = [], [], []
+    for name in sorted(set(old) & set(new)):
+        o, n = old[name], new[name]
+        if o <= 0.0:
+            continue                      # dead/zero baseline: no ratio
+        if o < min_us and n < min_us:
+            continue                      # both under the noise floor
+        ratio = n / o
+        compared.append((name, o, n, ratio))
+        if ratio > tol:
+            regressions.append((name, o, n, ratio))
+        elif ratio < 1.0 / tol:
+            improvements.append((name, o, n, ratio))
+    return regressions, improvements, compared
+
+
+def _report(regressions, improvements, compared, tol) -> int:
+    print(f"# compared {len(compared)} shared rows (tol {tol:g}x)")
+    for name, o, n, r in improvements:
+        print(f"improved,{name},{o:.1f},{n:.1f},{r:.2f}x")
+    for name, o, n, r in regressions:
+        print(f"REGRESSED,{name},{o:.1f},{n:.1f},{r:.2f}x")
+    if regressions:
+        print(f"# FAIL: {len(regressions)} row(s) regressed beyond "
+              f"{tol:g}x", file=sys.stderr)
+        return 1
+    print("# OK: no regressions")
+    return 0
+
+
+def selftest(tol: float, min_us: float) -> int:
+    old = {"a_tick": 1000.0, "b_kernel": 400.0, "c_tiny": 2.0,
+           "d_dead": 0.0, "e_retired": 77.0}
+    new = {"a_tick": 1000.0 * tol * 1.2,   # fabricated regression
+           "b_kernel": 100.0,              # improvement
+           "c_tiny": 40.0,                 # noise-floor skip
+           "d_dead": 123.0,                # zero-baseline skip
+           "f_fresh": 55.0}                # new row: ignored
+    reg, imp, cmpd = diff(old, new, tol, min_us)
+    assert [r[0] for r in reg] == ["a_tick"], reg
+    assert [r[0] for r in imp] == ["b_kernel"], imp
+    assert len(cmpd) == 2, cmpd
+    reg0, _, _ = diff(old, dict(old), tol, min_us)
+    assert not reg0, reg0                 # identity diff must pass
+    print("# selftest OK: regression detected, identity clean")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", nargs="?", help="baseline BENCH_<n>.json")
+    ap.add_argument("new", nargs="?", help="candidate BENCH_<m>.json")
+    ap.add_argument("--tol", type=float, default=1.5,
+                    help="max allowed new/old ratio (default 1.5)")
+    ap.add_argument("--min-us", type=float, default=50.0,
+                    help="skip rows under this in both runs (noise)")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify the comparator can fire, then exit")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest(args.tol, args.min_us)
+    if not args.old or not args.new:
+        ap.error("OLD and NEW bench files are required (or --selftest)")
+    reg, imp, cmpd = diff(load_rows(args.old), load_rows(args.new),
+                          args.tol, args.min_us)
+    return _report(reg, imp, cmpd, args.tol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,9 @@
 """NPU throughput (paper §IV): event encoding rate across DVS scenarios
 and voxelizer backends, LIF scan, end-to-end spiking inference latency,
-the engine's raw-event ingestion path, and spike-sparsity / tile-skip
-rates that drive the event-driven compute saving.
+the engine's raw-event ingestion path, spike-sparsity / tile-skip rates
+that drive the event-driven compute saving, and the fleet-serving
+latency/throughput envelope (benchmarks/serve_bench.py rides along so
+the serving rows land in the same BENCH_<n>.json trajectory).
 
 The backend sweep times every hot-path layer kind (LIF scan, spiking
 dense matmul), every backbone, and the engine submit->result tick under
@@ -204,6 +206,12 @@ def run(emit):
     # backend sweep: jnp vs pallas per layer kind / backbone / engine
     _backend_sweep(emit, rng)
     _engine_tick_sweep(emit, rng)
+
+    # fleet-serving envelope: p50/p99 latency + sustained req/s under
+    # 32 concurrent closed-loop streams through the continuous-batching
+    # FleetEngine (sharded over the serving mesh when devices allow)
+    from benchmarks import serve_bench
+    serve_bench.run(emit)
 
     # dense vs activity-gated spike-conv across sparsity regimes
     _sparse_conv_sweep(emit)

@@ -74,6 +74,16 @@ def main(argv=None) -> None:
     smoke = "--smoke" in argv
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    # --only <module>[,<module>...]: run a subset of the bench suite
+    # (e.g. the CI serving-smoke lane runs ``--only serve`` under 8
+    # forced host devices).  "npu" still includes the serving sweep it
+    # hosts; "serve" runs that sweep alone.
+    only = None
+    for i, a in enumerate(argv):
+        if a == "--only" and i + 1 < len(argv):
+            only = set(argv[i + 1].split(","))
+        elif a.startswith("--only="):
+            only = set(a.split("=", 1)[1].split(","))
 
     rows = []
     print("name,us_per_call,derived")
@@ -85,12 +95,28 @@ def main(argv=None) -> None:
                      "derived": str(derived)})
 
     from benchmarks import backbones, isp_bench, kernel_bench, npu_bench, \
-        roofline_bench
-    isp_bench.run(emit)
-    npu_bench.run(emit)
-    kernel_bench.run(emit)
-    backbones.run(emit)
-    roofline_bench.run(emit)
+        roofline_bench, serve_bench
+    modules = {"isp": isp_bench, "npu": npu_bench, "kernel": kernel_bench,
+               "backbones": backbones, "roofline": roofline_bench,
+               "serve": serve_bench}
+    if only is not None:
+        unknown = only - set(modules)
+        if unknown:
+            raise SystemExit(f"--only: unknown modules {sorted(unknown)}; "
+                             f"pick from {sorted(modules)}")
+        if "npu" in only:
+            only.discard("serve")   # npu hosts the serving sweep; running
+                                    # both would emit duplicate rows
+        for name in ("isp", "npu", "kernel", "backbones", "roofline",
+                     "serve"):
+            if name in only:
+                modules[name].run(emit)
+    else:
+        isp_bench.run(emit)
+        npu_bench.run(emit)
+        kernel_bench.run(emit)
+        backbones.run(emit)
+        roofline_bench.run(emit)
 
     doc = {"schema": BENCH_SCHEMA_VERSION, "created_unix": time.time(),
            "smoke": smoke, "rows": rows}

@@ -20,15 +20,24 @@ line-buffered single-pass datapath.  Either way a per-tick ISP timing
 comparison (per-stage jnp vs fused) is printed so the speedup is
 visible.
 
+``--concurrency N`` switches the demo to the FleetEngine serving
+front-end: N closed-loop client streams share the sharded, double-
+buffered, continuously-batched tick with bounded admission; add
+``--deadline-ms X`` to shed requests that can't make their deadline
+(the ADAS stale-frame-is-worse-than-dropped policy).  Prints the
+p50/p99 latency + req/s envelope and the shed/rejected counters.
+
   PYTHONPATH=src python examples/cognitive_stream.py [--frames 12]
   PYTHONPATH=src python examples/cognitive_stream.py --fused
+  PYTHONPATH=src python examples/cognitive_stream.py \
+      --concurrency 16 --deadline-ms 200
 """
 import argparse
 import time
 
 import jax
 
-from repro.configs import EncodingConfig
+from repro.configs import EncodingConfig, FleetConfig
 from repro.configs.registry import get_isp_config, reduced_snn
 from repro.core.encoding import voxel_batch
 from repro.core.npu import configure_for_isp, init_npu
@@ -75,6 +84,60 @@ def time_isp_per_tick(cfg, isp_cfg, batch, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
+def serve_fleet(cfg, isp, params, args):
+    """Closed-loop fleet serving demo: ``--concurrency`` client streams
+    each keep one request outstanding against the FleetEngine."""
+    from repro.serve.fleet import FleetEngine
+    from repro.serve.scheduler import RequestStatus
+
+    n = args.concurrency
+    fc = FleetConfig(batch=args.batch, max_queue=2 * n,
+                     default_deadline_ms=args.deadline_ms)
+    fleet = FleetEngine(params, cfg, isp, fleet_cfg=fc)
+    payloads = make_requests(cfg, n)
+    print(f"fleet serving: {n} closed-loop streams, batch {args.batch}, "
+          f"{fleet.core.n_devices} device(s), "
+          f"deadline {args.deadline_ms or 'none'} ms")
+
+    # warm the executable outside the measured window
+    fleet.submit(PerceptionRequest(rid=-1, voxels=payloads[0].voxels,
+                                   bayer=payloads[0].bayer))
+    fleet.drain()
+    fleet._latencies.clear()
+    fleet.n_delivered = 0
+    fleet.n_deadline_missed = 0    # warm-up absorbs the jit compile
+
+    rounds = max(1, args.frames // n)
+    outstanding, rid = {}, 0
+    for s, p in enumerate(payloads):
+        sreq = fleet.submit(PerceptionRequest(rid=rid, voxels=p.voxels,
+                                              bayer=p.bayer))
+        outstanding[rid] = (s, rounds - 1)
+        rid += 1
+    t0 = time.perf_counter()
+    while outstanding or fleet._inflight is not None:
+        for sreq in fleet.step():
+            s, left = outstanding.pop(sreq.rid)
+            if sreq.status is RequestStatus.DONE and left > 0:
+                p = payloads[s]
+                nxt = fleet.submit(PerceptionRequest(
+                    rid=rid, voxels=p.voxels, bayer=p.bayer))
+                if nxt.status is RequestStatus.QUEUED:
+                    outstanding[rid] = (s, left - 1)
+                rid += 1
+    wall = time.perf_counter() - t0
+    st = fleet.stats()
+    print(f"  delivered {st['delivered']} "
+          f"({st['delivered'] / wall:.1f} req/s sustained)")
+    print(f"  latency p50 {st['latency_p50_s'] * 1e3:.1f} ms / "
+          f"p99 {st['latency_p99_s'] * 1e3:.1f} ms "
+          f"(enqueue->deliver, queueing included)")
+    print(f"  shed {st['expired']} expired, {st['rejected']} rejected, "
+          f"{st['deadline_missed']} delivered-late, "
+          f"{st['ticks']} ticks, "
+          f"{fleet._step._cache_size()} executable(s)")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--frames", type=int, default=12)
@@ -82,10 +145,21 @@ def main():
     ap.add_argument("--fused", action="store_true",
                     help="serve the ISP through the fusion planner "
                          "(backend='pallas_fused')")
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="serve N closed-loop streams through the "
+                         "FleetEngine instead of the plain engine demo")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for --concurrency mode "
+                         "(expired queued requests are shed)")
     args = ap.parse_args()
 
     cfg = reduced_snn("spiking_yolo")
     isp = get_isp_config("fused" if args.fused else "default")
+
+    if args.concurrency > 0:
+        params = init_npu(jax.random.PRNGKey(0), cfg)
+        serve_fleet(cfg, isp, params, args)
+        return
 
     print(f"{isp.name} pipeline (control_dim derived = "
           f"{isp.control_dim}):")

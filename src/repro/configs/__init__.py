@@ -1,8 +1,10 @@
 from repro.configs.base import (DEFAULT_ISP_STAGES, EncodingConfig,  # noqa: F401,E501
-                                ISPConfig, MLAConfig, ModelConfig, MoEConfig,
-                                SHAPES, SHAPES_BY_NAME, SNNConfig, SSMConfig,
+                                FleetConfig, ISPConfig, MLAConfig,
+                                ModelConfig, MoEConfig, SHAPES,
+                                SHAPES_BY_NAME, SNNConfig, SSMConfig,
                                 ShapeConfig)
 from repro.configs.registry import (ARCHS, ENCODING_CONFIGS,  # noqa: F401
-                                    ISP_CONFIGS, SNN_ARCHS, get_config,
-                                    get_encoding_config, get_isp_config,
+                                    FLEET_CONFIGS, ISP_CONFIGS, SNN_ARCHS,
+                                    get_config, get_encoding_config,
+                                    get_fleet_config, get_isp_config,
                                     get_snn_config, reduced, shape_cells)

@@ -248,6 +248,31 @@ class EncodingConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    """Continuous-batching serving policy for the cognitive path
+    (repro.serve.fleet).  Frozen/hashable like every other config.
+
+    ``batch``: tick batch (slot count) — must divide evenly over the
+    serving mesh's data devices when sharded.
+    ``max_queue``: admission-control bound; submits beyond it are
+    REJECTED immediately (backpressure, not buffering).
+    ``default_deadline_ms``: per-request deadline measured from
+    enqueue, applied when the submit carries none (None = requests
+    never expire).
+    ``double_buffer``: ping-pong host staging banks so tick N+1's
+    pack+upload overlaps tick N's compute (results then deliver one
+    ``step()`` later — pipeline depth 2).
+    ``shard``: partition the tick batch over a data mesh when more
+    than one device is visible."""
+    name: str = "fleet"
+    batch: int = 8
+    max_queue: int = 64
+    default_deadline_ms: Optional[float] = None
+    double_buffer: bool = True
+    shard: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
 class SNNConfig:
     """Spiking backbone config (the paper's own architectures)."""
     name: str = "spiking_yolo"

@@ -11,8 +11,9 @@ from typing import Dict, List, Tuple
 
 from repro.configs import base
 from repro.configs.base import (DEFAULT_ISP_STAGES, EncodingConfig,
-                                ISPConfig, MLAConfig, ModelConfig, MoEConfig,
-                                SNNConfig, SSMConfig, ShapeConfig)
+                                FleetConfig, ISPConfig, MLAConfig,
+                                ModelConfig, MoEConfig, SNNConfig, SSMConfig,
+                                ShapeConfig)
 
 # ---------------------------------------------------------------------------
 # Assigned architectures (shapes per brief; sources in DESIGN.md)
@@ -252,3 +253,24 @@ ENCODING_CONFIGS: Dict[str, EncodingConfig] = {
 
 def get_encoding_config(name: str) -> EncodingConfig:
     return ENCODING_CONFIGS[name]
+
+
+# ---------------------------------------------------------------------------
+# Named fleet-serving profiles (repro.serve.fleet policies)
+# ---------------------------------------------------------------------------
+
+FLEET_CONFIGS: Dict[str, FleetConfig] = {
+    # balanced default: sharded, double-buffered, bounded queue
+    "fleet": FleetConfig(name="fleet"),
+    # ADAS/UAV edge profile: small batch, hard 50 ms deadline, depth-1
+    # pipeline (no extra tick of latency), tiny admission queue
+    "edge_realtime": FleetConfig(name="edge_realtime", batch=4,
+                                 max_queue=8, default_deadline_ms=50.0,
+                                 double_buffer=False),
+    # offline/throughput profile: wide ticks, deep queue, no deadlines
+    "throughput": FleetConfig(name="throughput", batch=16, max_queue=512),
+}
+
+
+def get_fleet_config(name: str) -> FleetConfig:
+    return FLEET_CONFIGS[name]

@@ -90,6 +90,25 @@ def shard(x, ax: MeshAxes, *spec):
         x, NamedSharding(ax.mesh, P(*cleaned)))
 
 
+def batch_sharding(ax: MeshAxes, batch_dim: int = 0):
+    """NamedSharding partitioning ``batch_dim`` over the data-parallel
+    axes, replicated on every other dim (rank-polymorphic: trailing
+    dims default to replicated).  ``None`` without a mesh — serving
+    code passes the result straight to ``jax.device_put``."""
+    if ax.mesh is None or not ax.dp:
+        return None
+    spec = [None] * batch_dim + [ax.dp_spec]
+    return NamedSharding(ax.mesh, P(*spec))
+
+
+def replicated_sharding(ax: MeshAxes):
+    """Fully-replicated NamedSharding (params on a serving mesh);
+    ``None`` without a mesh."""
+    if ax.mesh is None:
+        return None
+    return NamedSharding(ax.mesh, P())
+
+
 def maybe_psum(x, axis: Optional[str]):
     """psum over ``axis`` when inside shard_map; identity otherwise."""
     if axis is None:

@@ -14,6 +14,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_serving_mesh(batch: int = None, max_devices: int = None):
+    """1-D ``("data",)`` mesh for the cognitive serving tick: the
+    largest visible-device count that divides the tick ``batch`` (the
+    per-slot math is batch-parallel, so the only constraint is an even
+    slot split).  Returns ``None`` when a single device (or batch=1)
+    makes sharding pointless — callers degrade to the local path."""
+    n = len(jax.devices())
+    if max_devices is not None:
+        n = min(n, max_devices)
+    if batch is not None:
+        while n > 1 and batch % n:
+            n -= 1
+    if n <= 1:
+        return None
+    return jax.make_mesh((n,), ("data",))
+
+
 def make_mesh_for(devices: int, model_parallel: int = None):
     """Elastic mesh: derive the largest (data, model) mesh from whatever
     device count survives a failure (see distributed/elastic.py)."""

@@ -1,4 +1,11 @@
 from repro.serve.cognitive_engine import (CognitiveEngine,  # noqa: F401
                                           PerceptionRequest,
                                           PerceptionResult)
+from repro.serve.engine_core import EngineCore  # noqa: F401
 from repro.serve.engine import Request, ServeEngine  # noqa: F401
+from repro.serve.fleet import FleetEngine  # noqa: F401
+from repro.serve.scheduler import (AdmissionQueue,  # noqa: F401
+                                   RequestStatus, RequestTelemetry,
+                                   ServeRequest)
+from repro.serve.transport import (DoubleBuffer,  # noqa: F401
+                                   StagingBank)

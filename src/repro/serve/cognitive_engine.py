@@ -2,58 +2,42 @@
 batching of ``encode -> npu_forward -> control -> ISP`` (paper §VI as a
 servable workload, mirroring ``ServeEngine``'s design).
 
-A fixed pool of ``batch`` slots shares ONE jit-compiled step executable
-(static shapes — TPU-friendly).  Clients submit perception requests —
-either a finished DVS voxel window (``submit``) or a RAW event buffer
-(``submit_events``, paper §IV-A: the event->spike half of the loop) —
-plus one Bayer frame; every ``tick`` voxelizes the event slots, runs the
-whole active batch through the NPU and the registry-built ISP pipeline,
-hands back finished requests, and recycles their slots.  Unlike the LM
-engine there is no autoregressive tail: a perception request completes
-in a single tick, so throughput is ``batch`` frames per executable
-launch and the slot machinery exists to keep the batch full under
-ragged arrival.
+Since the engine-core/transport split this module is the THIN single-
+device composition of the serving stack:
 
-Zero-copy tick discipline: submissions stage into HOST-side numpy slot
-buffers (a submit is a memcpy into a slot, no device dispatch — note
-the corollary: requests are expected to arrive as host data, numpy or
-fresh sensor I/O; submitting a device-resident array costs a
-device-to-host copy on admission), the
-tick uploads the whole staging area with ONE ``jax.device_put`` of the
-slot pytree, and the uploaded buffers are DONATED to the step
-executable (``donate_argnums``) so XLA reuses their device allocation
-instead of holding two copies.  Results come back with one batched
-``jax.device_get`` of the full output pytree; per-request results are
-then numpy views, not per-leaf device round-trips.  The previous
-per-submit ``.at[slot].set()`` scheme dispatched one executable per
-LEAF per request — O(batch x leaves) launches of tick overhead before
-the real step even ran.
+* the jit-cached tick executable lives in
+  :class:`repro.serve.engine_core.EngineCore` (which also knows how to
+  shard the batch over a device mesh — not used here),
+* the host-side numpy staging slots live in
+  :class:`repro.serve.transport.StagingBank`,
+* the multi-device continuous-batching front-end (admission control,
+  deadlines, double-buffered staging) is
+  :class:`repro.serve.fleet.FleetEngine`.
 
-The event path is part of the SAME tick executable: per-slot event
-FIFOs (bounded at ``enc_cfg.event_capacity``, overfull windows budgeted
-earliest-first on admission) ride along as static-shape inputs, the
-encode stage voxelizes all of them every tick, and a per-slot flag
-selects encoded-vs-submitted voxels.  Mixing ``submit`` and
-``submit_events`` in one batch therefore costs no retrace — the flag is
-a traced value, exactly the FPGA datapath discipline of one wired
-circuit serving every mux setting.
+The public contract is unchanged.  A fixed pool of ``batch`` slots
+shares ONE jit-compiled step executable (static shapes — TPU-friendly).
+Clients submit perception requests — either a finished DVS voxel window
+(``submit``) or a RAW event buffer (``submit_events``, paper §IV-A) —
+plus one Bayer frame; every ``tick`` voxelizes the event slots, runs
+the whole active batch through the NPU and the registry-built ISP
+pipeline, hands back finished requests, and recycles their slots.
+Perception completes in a single tick, so the slot machinery exists to
+keep the batch full under ragged arrival.
 
-The ISP stage ordering/backend comes from an ``ISPConfig``; the NPU
-control vector is auto-mapped onto the declared stage parameter ranges,
-so swapping in a reordered or extended pipeline (e.g. the "hdr" config)
-is a constructor argument, not a code change.  Likewise the ingestion
-policy (voxel mode, boundary-timestamp handling, FIFO depth, jnp vs
-Pallas voxelizer) is an ``EncodingConfig``, and the NPU layer backend
-(jnp vs the fused Pallas kernels, including the activity-gated
-spike-im2col conv path — silent MXU tiles skip their pass inside the
-tick) is the ``SNNConfig.backend`` field.  ``collect_sparsity=True``
-threads the SparsityTape through the tick executable so per-layer
-spike rates ride back on every ``PerceptionResult``.
-The ISP half of the tick goes stream-resident the same way:
-``ISPConfig(backend="pallas_fused")`` (registry name "fused") routes
-the vmapped per-slot pipeline through the fusion planner's tile-
-resident megakernels (repro.isp.fuse) inside the SAME tick executable
-— identical ``PerceptionResult``s, O(#segments) memory passes.
+Zero-copy tick discipline (PR 3): submissions stage into HOST-side
+numpy slot buffers (a submit is a memcpy, no device dispatch), the tick
+uploads the whole staging bank with ONE ``jax.device_put`` and DONATES
+the buffers to the step executable; results come back with one batched
+``jax.device_get``.  The event path is part of the SAME tick
+executable: bounded per-slot FIFOs ride along as static-shape inputs
+and a traced per-slot flag selects encoded-vs-submitted voxels, so
+mixing ``submit`` and ``submit_events`` costs no retrace.
+
+Configuration is unchanged: ``ISPConfig`` (stage ordering/backend,
+incl. ``"pallas_fused"`` megakernels), ``EncodingConfig`` (ingestion
+policy), ``SNNConfig.backend`` (jnp vs Pallas NPU kernels), and
+``collect_sparsity=True`` threads the SparsityTape through the tick so
+per-layer spike rates ride back on every ``PerceptionResult``.
 """
 from __future__ import annotations
 
@@ -67,13 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import EncodingConfig, ISPConfig, SNNConfig
-from repro.core.encoding import (EventStream, events_to_voxel_batch,
-                                 fit_stream)
-from repro.core.npu import npu_forward
-from repro.isp.pipeline import (control_vector_pipeline,
-                                legacy_control_permutation)
-from repro.isp.stages import BACKENDS as ISP_BACKENDS
-from repro.isp.stages import control_to_stage_params
+from repro.core.encoding import EventStream
 
 
 class PerceptionResult(NamedTuple):
@@ -86,6 +64,10 @@ class PerceptionResult(NamedTuple):
     # every request finished by one tick shares the dict); populated
     # when the engine was built with collect_sparsity=True, else None
     sparsity: Optional[Dict[str, float]] = None
+    # per-request lifecycle timestamps (scheduler.RequestTelemetry:
+    # enqueue -> admit -> dispatch -> deliver + deadline_missed);
+    # populated by FleetEngine, None through the plain CognitiveEngine
+    telemetry: Optional[Any] = None
 
 
 @dataclasses.dataclass
@@ -116,103 +98,42 @@ class CognitiveEngine:
         executable so per-layer spike rates come back with every tick
         (``PerceptionResult.sparsity``) — same jit'd forward, no second
         pass; the only cost is a handful of extra scalar outputs."""
+        from repro.serve.engine_core import EngineCore
+        from repro.serve.transport import StagingBank
+
+        self.core = EngineCore(
+            npu_params, cfg, isp_cfg, batch=batch, frame_hw=frame_hw,
+            control_order=control_order, enc_cfg=enc_cfg,
+            collect_sparsity=collect_sparsity, mesh=None)
         self.params = npu_params
         self.cfg = cfg
-        self.isp_cfg = isp_cfg if isp_cfg is not None else ISPConfig()
-        self.enc_cfg = enc_cfg if enc_cfg is not None else EncodingConfig()
-        need = self.isp_cfg.control_dim
-        if cfg.control_dim < need:
-            raise ValueError(
-                f"NPU control_dim={cfg.control_dim} < {need} needed by ISP "
-                f"pipeline {self.isp_cfg.name!r}; build the SNNConfig with "
-                f"repro.core.npu.configure_for_isp")
-        if self.enc_cfg.backend not in ("jnp", "pallas"):
-            raise ValueError(f"unknown encoding backend "
-                             f"{self.enc_cfg.backend!r}")
-        # fail fast at construction rather than at the first tick trace
-        if self.isp_cfg.backend not in ISP_BACKENDS:
-            raise ValueError(
-                f"unknown ISP backend {self.isp_cfg.backend!r}; "
-                f"registered: {ISP_BACKENDS}")
+        self.isp_cfg = self.core.isp_cfg
+        self.enc_cfg = self.core.enc_cfg
         self.batch = batch
-        H, W = frame_hw if frame_hw is not None else (cfg.height, cfg.width)
-        # HOST-side staging slot buffers: submits memcpy into them, the
-        # tick uploads the lot in one device_put (inactive slots carry
-        # zeros and ride along in the fixed-shape executable).
-        self.voxels = np.zeros(
-            (cfg.time_steps, batch, cfg.height, cfg.width, cfg.in_channels),
-            np.float32)
-        self.bayer = np.zeros((batch, H, W), np.float32)
-        cap = self.enc_cfg.event_capacity
-        self.events = EventStream(
-            t=np.zeros((batch, cap), np.float32),
-            x=np.zeros((batch, cap), np.int32),
-            y=np.zeros((batch, cap), np.int32),
-            p=np.zeros((batch, cap), np.int32),
-            valid=np.zeros((batch, cap), bool))
-        self.from_events = np.zeros((batch,), bool)
+        self.staging = StagingBank(cfg, batch, self.core.frame_hw,
+                                   self.enc_cfg.event_capacity)
         self.active: List[Optional[PerceptionRequest]] = [None] * batch
         self.ticks = 0
         self.last_tick_s = 0.0      # wall time of the latest tick()
+        self._step = self.core._step   # the ONE tick executable
 
-        if control_order not in ("pipeline", "legacy"):
-            raise ValueError(f"control_order must be 'pipeline' or "
-                             f"'legacy', got {control_order!r}")
-        perm = None
-        if control_order == "legacy":
-            p = legacy_control_permutation(self.isp_cfg.stages)
-            # the permutation gathers *legacy* slot positions, which may
-            # exceed the pipeline's derived width (a subset pipeline
-            # still reads the historical 8-slot layout) — an undersized
-            # head would silently clamp the gather otherwise
-            if cfg.control_dim <= max(p):
-                raise ValueError(
-                    f"NPU control_dim={cfg.control_dim} too narrow for "
-                    f"the legacy slot layout (needs > {max(p)})")
-            perm = jnp.asarray(p, jnp.int32)
-        icfg, ncfg, ecfg, nd = self.isp_cfg, cfg, self.enc_cfg, need
-        collect = bool(collect_sparsity)
+    # staging-bank views (host numpy; kept as attributes of record so
+    # tests and tools can inspect the slot state directly)
+    @property
+    def voxels(self):
+        return self.staging.voxels
 
-        def _encode(events):
-            if ecfg.backend == "pallas":
-                from repro.kernels.ops import event_voxel_op
-                vox = event_voxel_op(
-                    events, time_steps=ncfg.time_steps, height=ncfg.height,
-                    width=ncfg.width, window=ecfg.window, mode=ecfg.mode,
-                    oob=ecfg.oob)
-            else:
-                vox = events_to_voxel_batch(
-                    events, time_steps=ncfg.time_steps, height=ncfg.height,
-                    width=ncfg.width, window=ecfg.window, mode=ecfg.mode,
-                    oob=ecfg.oob)
-            return jnp.moveaxis(vox, 0, 1)            # -> [T, B, H, W, 2]
+    @property
+    def bayer(self):
+        return self.staging.bayer
 
-        def _step(params, voxels, bayer, events, from_events):
-            # encode stage: voxelize the event slots inside the same
-            # executable (slots submitted as voxels keep their buffer);
-            # traced out entirely for non-DVS channel layouts
-            if ncfg.in_channels == 2:
-                enc = _encode(events)
-                voxels = jnp.where(from_events[None, :, None, None, None],
-                                   enc, voxels)
-            out = npu_forward(params, voxels, ncfg,
-                              collect_sparsity=collect)
-            ctrl = out.control[:, perm] if perm is not None \
-                else out.control[:, :nd]
-            rgb = jax.vmap(
-                lambda r, c: control_vector_pipeline(r, c, icfg))(bayer, ctrl)
-            sp = jax.vmap(
-                lambda c: control_to_stage_params(c, icfg.stages))(ctrl)
-            return out, rgb, sp
+    @property
+    def events(self):
+        return self.staging.events
 
-        # one executable serves every tick / control setting / ingestion
-        # mix (the FPGA runtime-reconfigurability analogue, same as
-        # ServeEngine._decode).  The slot arguments are donated: the
-        # per-tick upload hands its device buffers to XLA for reuse, so
-        # steady-state serving holds one device copy of the slot state,
-        # not two.  (On backends without donation support this is a
-        # no-op warning, never an error.)
-        self._step = jax.jit(_step, donate_argnums=(1, 2, 3, 4))
+    @property
+    def from_events(self):
+        return self.staging.from_events
 
     # ------------------------------------------------------------------
     def _free_slot(self) -> Optional[int]:
@@ -226,19 +147,14 @@ class CognitiveEngine:
         memcpy — no device dispatch until the tick).  False if the
         engine is full.  Requests carrying raw events (and no voxels)
         route through ``submit_events``."""
-        if req.voxels is None:
-            if req.events is None:
-                raise ValueError(f"request {req.rid}: neither voxels nor "
-                                 f"events")
+        from repro.serve.transport import stage_request, validate_request
+        kind = validate_request(req, self.cfg.in_channels)
+        if kind == "events":
             return self.submit_events(req)
-        if req.bayer is None:
-            raise ValueError(f"request {req.rid} carries no bayer frame")
         slot = self._free_slot()
         if slot is None:
             return False
-        self.voxels[:, slot] = np.asarray(req.voxels, np.float32)
-        self.bayer[slot] = np.asarray(req.bayer, np.float32)
-        self.from_events[slot] = False
+        stage_request(self.staging, slot, req, kind, self.enc_cfg)
         self.active[slot] = req
         return True
 
@@ -249,24 +165,13 @@ class CognitiveEngine:
         under-full windows are validity-padded, overfull ones budgeted
         to the ``enc_cfg.event_capacity`` earliest events.  False if
         the engine is full."""
-        if req.events is None:
-            raise ValueError(f"request {req.rid} carries no events")
-        if req.bayer is None:
-            raise ValueError(f"request {req.rid} carries no bayer frame")
-        if self.cfg.in_channels != 2:
-            raise ValueError("event ingestion needs in_channels=2 "
-                             "(DVS polarity channels)")
+        from repro.serve.transport import stage_request, validate_request
+        kind = validate_request(req, self.cfg.in_channels,
+                                events_only=True)
         slot = self._free_slot()
         if slot is None:
             return False
-        ev = fit_stream(req.events, self.enc_cfg.event_capacity)
-        self.events.t[slot] = np.asarray(ev.t, np.float32)
-        self.events.x[slot] = np.asarray(ev.x, np.int32)
-        self.events.y[slot] = np.asarray(ev.y, np.int32)
-        self.events.p[slot] = np.asarray(ev.p, np.int32)
-        self.events.valid[slot] = np.asarray(ev.valid, bool)
-        self.bayer[slot] = np.asarray(req.bayer, np.float32)
-        self.from_events[slot] = True
+        stage_request(self.staging, slot, req, kind, self.enc_cfg)
         self.active[slot] = req
         return True
 
@@ -278,16 +183,10 @@ class CognitiveEngine:
         if not any(r is not None for r in self.active):
             return []
         t0 = time.perf_counter()
-        # ONE host->device upload of the whole staging area per tick
-        # (asserted by the dispatch-counting test); the donated buffers
-        # are consumed by the step executable
-        voxels, bayer, events, from_events = jax.device_put(
-            (self.voxels, self.bayer, self.events, self.from_events))
-        out, rgb, sp = self._step(self.params, voxels, bayer, events,
-                                  from_events)
-        # ONE batched device->host fetch of the whole output pytree;
-        # per-request results below are numpy views into it
-        out, rgb, sp = jax.device_get((out, rgb, sp))
+        # ONE host->device upload of the whole staging bank, ONE step
+        # launch, ONE batched device->host fetch (EngineCore.tick);
+        # per-request results below are numpy views into the fetch
+        out, rgb, sp = self.core.tick(self.staging.as_tuple())
         self.last_tick_s = time.perf_counter() - t0
         self.ticks += 1
         # batch-level sparsity telemetry (one dict per tick, shared by

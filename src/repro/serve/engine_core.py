@@ -1,0 +1,186 @@
+"""EngineCore: the device-side half of the cognitive serving stack.
+
+The engine-core/transport split (ROADMAP "fleet serving"):
+
+* ``EngineCore`` (this module) owns everything that touches devices —
+  config validation, the ONE jit-cached ``encode -> npu_forward ->
+  control -> ISP`` tick executable, the upload/dispatch/fetch
+  discipline, and (new) sharding the tick batch across a device mesh.
+* ``repro.serve.transport`` owns the host side — numpy staging banks a
+  submit memcpys into, double-buffered so tick N+1's upload overlaps
+  tick N's compute.
+* ``repro.serve.scheduler`` owns request lifecycle — admission
+  control, deadlines, telemetry.
+* ``repro.serve.fleet`` composes the three into the multi-device
+  continuous-batching ``FleetEngine``; ``repro.serve.cognitive_engine``
+  composes core + a single staging bank into the original slot API.
+
+Sharding: pass a 1-D ``("data",)`` mesh (see
+``repro.launch.mesh.make_serving_mesh``) and the core replicates the
+NPU params once at construction and uploads every slot pytree with the
+batch dimension partitioned over the data axis
+(``repro.distributed.sharding.batch_sharding``).  The tick math is
+batch-parallel (per-slot instance norms, vmapped ISP), so XLA runs it
+SPMD with no resharding; only the batch-reduced sparsity telemetry
+crosses devices (an all-reduce).  ``mesh=None`` degrades to the
+single-device path, bit-for-bit the pre-split engine.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import EncodingConfig, ISPConfig, SNNConfig
+from repro.core.encoding import EventStream, events_to_voxel_batch
+from repro.core.npu import npu_forward
+from repro.distributed.sharding import (MeshAxes, batch_sharding,
+                                        from_mesh, replicated_sharding)
+from repro.isp.pipeline import (control_vector_pipeline,
+                                legacy_control_permutation)
+from repro.isp.stages import BACKENDS as ISP_BACKENDS
+from repro.isp.stages import control_to_stage_params
+
+
+class EngineCore:
+    """Owns the jit-cached tick executable and its device placement."""
+
+    def __init__(self, npu_params, cfg: SNNConfig,
+                 isp_cfg: Optional[ISPConfig] = None, *, batch: int = 4,
+                 frame_hw: Optional[tuple] = None,
+                 control_order: str = "pipeline",
+                 enc_cfg: Optional[EncodingConfig] = None,
+                 collect_sparsity: bool = False,
+                 mesh=None):
+        self.cfg = cfg
+        self.isp_cfg = isp_cfg if isp_cfg is not None else ISPConfig()
+        self.enc_cfg = enc_cfg if enc_cfg is not None else EncodingConfig()
+        need = self.isp_cfg.control_dim
+        if cfg.control_dim < need:
+            raise ValueError(
+                f"NPU control_dim={cfg.control_dim} < {need} needed by ISP "
+                f"pipeline {self.isp_cfg.name!r}; build the SNNConfig with "
+                f"repro.core.npu.configure_for_isp")
+        if self.enc_cfg.backend not in ("jnp", "pallas"):
+            raise ValueError(f"unknown encoding backend "
+                             f"{self.enc_cfg.backend!r}")
+        # fail fast at construction rather than at the first tick trace
+        if self.isp_cfg.backend not in ISP_BACKENDS:
+            raise ValueError(
+                f"unknown ISP backend {self.isp_cfg.backend!r}; "
+                f"registered: {ISP_BACKENDS}")
+        self.batch = batch
+        self.frame_hw: Tuple[int, int] = (
+            frame_hw if frame_hw is not None else (cfg.height, cfg.width))
+
+        if control_order not in ("pipeline", "legacy"):
+            raise ValueError(f"control_order must be 'pipeline' or "
+                             f"'legacy', got {control_order!r}")
+        perm = None
+        if control_order == "legacy":
+            p = legacy_control_permutation(self.isp_cfg.stages)
+            # the permutation gathers *legacy* slot positions, which may
+            # exceed the pipeline's derived width (a subset pipeline
+            # still reads the historical 8-slot layout) — an undersized
+            # head would silently clamp the gather otherwise
+            if cfg.control_dim <= max(p):
+                raise ValueError(
+                    f"NPU control_dim={cfg.control_dim} too narrow for "
+                    f"the legacy slot layout (needs > {max(p)})")
+            perm = jnp.asarray(p, jnp.int32)
+
+        # ---- mesh placement --------------------------------------------
+        self.ax: MeshAxes = from_mesh(mesh)
+        self.n_devices = self.ax.dp_size
+        if self.n_devices > 1 and batch % self.n_devices:
+            raise ValueError(
+                f"tick batch={batch} not divisible by the mesh's "
+                f"{self.n_devices} data-parallel devices")
+        self._slot_shardings = None
+        self.params = npu_params
+        if self.ax.mesh is not None:
+            # params replicated once at construction; every slot leaf
+            # partitioned over the data axis on its batch dim
+            rep = replicated_sharding(self.ax)
+            self.params = jax.device_put(npu_params, jax.tree_util.tree_map(
+                lambda _: rep, npu_params))
+            b0 = batch_sharding(self.ax, 0)
+            self._slot_shardings = (
+                batch_sharding(self.ax, 1),          # voxels [T,B,H,W,C]
+                b0,                                  # bayer  [B,H,W]
+                EventStream(t=b0, x=b0, y=b0, p=b0, valid=b0),
+                b0,                                  # from_events [B]
+            )
+
+        icfg, ncfg, ecfg, nd = self.isp_cfg, cfg, self.enc_cfg, need
+        collect = bool(collect_sparsity)
+
+        def _encode(events):
+            if ecfg.backend == "pallas":
+                from repro.kernels.ops import event_voxel_op
+                vox = event_voxel_op(
+                    events, time_steps=ncfg.time_steps, height=ncfg.height,
+                    width=ncfg.width, window=ecfg.window, mode=ecfg.mode,
+                    oob=ecfg.oob)
+            else:
+                vox = events_to_voxel_batch(
+                    events, time_steps=ncfg.time_steps, height=ncfg.height,
+                    width=ncfg.width, window=ecfg.window, mode=ecfg.mode,
+                    oob=ecfg.oob)
+            return jnp.moveaxis(vox, 0, 1)            # -> [T, B, H, W, 2]
+
+        def _step(params, voxels, bayer, events, from_events):
+            # encode stage: voxelize the event slots inside the same
+            # executable (slots submitted as voxels keep their buffer);
+            # traced out entirely for non-DVS channel layouts
+            if ncfg.in_channels == 2:
+                enc = _encode(events)
+                voxels = jnp.where(from_events[None, :, None, None, None],
+                                   enc, voxels)
+            out = npu_forward(params, voxels, ncfg,
+                              collect_sparsity=collect)
+            ctrl = out.control[:, perm] if perm is not None \
+                else out.control[:, :nd]
+            rgb = jax.vmap(
+                lambda r, c: control_vector_pipeline(r, c, icfg))(bayer, ctrl)
+            sp = jax.vmap(
+                lambda c: control_to_stage_params(c, icfg.stages))(ctrl)
+            return out, rgb, sp
+
+        # one executable serves every tick / control setting / ingestion
+        # mix / mesh extent (the FPGA runtime-reconfigurability
+        # analogue).  The slot arguments are donated: the per-tick
+        # upload hands its device buffers to XLA for reuse, so
+        # steady-state serving holds one device copy of the slot state,
+        # not two.  (On backends without donation support this is a
+        # no-op warning, never an error.)
+        self._step = jax.jit(_step, donate_argnums=(1, 2, 3, 4))
+
+    # ------------------------------------------------------------------
+    def upload(self, slots):
+        """ONE host->device transfer of a whole staging bank
+        ``(voxels, bayer, events, from_events)``; partitioned over the
+        mesh's data axis when sharded.  Returns device buffers ready to
+        be donated to :meth:`dispatch`."""
+        if self._slot_shardings is None:
+            return jax.device_put(slots)
+        return jax.device_put(slots, self._slot_shardings)
+
+    def dispatch(self, slots_dev):
+        """Launch the tick executable on uploaded slot buffers.  JAX
+        dispatch is asynchronous: this returns futures immediately, so a
+        caller may upload the NEXT bank while this tick computes (the
+        double-buffer overlap ``repro.serve.fleet`` exploits)."""
+        voxels, bayer, events, from_events = slots_dev
+        return self._step(self.params, voxels, bayer, events, from_events)
+
+    def fetch(self, outputs):
+        """ONE batched device->host gather of the tick's output pytree
+        (blocks until the compute lands)."""
+        return jax.device_get(outputs)
+
+    def tick(self, slots):
+        """upload -> dispatch -> fetch in one call (the unpipelined
+        path ``CognitiveEngine`` uses)."""
+        return self.fetch(self.dispatch(self.upload(slots)))

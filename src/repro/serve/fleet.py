@@ -1,0 +1,244 @@
+"""FleetEngine: sharded, continuously-batched serving for the
+cognitive path (ROADMAP "millions of users" direction).
+
+Composes the split serving stack:
+
+* :class:`repro.serve.engine_core.EngineCore` — the jit-cached
+  ``encode -> NPU -> control -> ISP`` tick, batch-sharded over a 1-D
+  ``("data",)`` mesh (``repro.launch.mesh.make_serving_mesh``).
+* :class:`repro.serve.transport.DoubleBuffer` — two host staging
+  banks; tick N+1 packs and uploads while tick N computes.
+* :class:`repro.serve.scheduler.AdmissionQueue` — bounded admission,
+  per-request deadlines, shed-don't-stall expiry.
+
+Continuous batching: every ``step()`` packs as many queued requests as
+there are free slots into the next tick (ragged arrival keeps the
+static batch full), dispatches it asynchronously, and harvests the
+PREVIOUS tick's results.  With double buffering the pipeline is two
+deep — a request's result arrives at the step after its dispatch —
+trading one tick of latency for upload/compute overlap; with
+``double_buffer=False`` each step dispatches and harvests the same
+tick (the low-latency edge profile).
+
+Every delivered ``PerceptionResult`` carries a
+``scheduler.RequestTelemetry`` (enqueue -> admit -> dispatch ->
+deliver timestamps plus ``deadline_missed``); ``stats()`` reduces them
+to the p50/p99 latency + sustained req/s envelope
+``benchmarks/serve_bench.py`` reports.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+
+from repro.configs.base import (EncodingConfig, FleetConfig, ISPConfig,
+                                SNNConfig)
+from repro.launch.mesh import make_serving_mesh
+from repro.serve.cognitive_engine import PerceptionRequest, PerceptionResult
+from repro.serve.engine_core import EngineCore
+from repro.serve.scheduler import (AdmissionQueue, RequestStatus,
+                                   RequestTelemetry, ServeRequest)
+from repro.serve.transport import (DoubleBuffer, StagingBank,
+                                   stage_request, validate_request)
+
+
+class _Inflight:
+    """One dispatched tick: its packed (slot, request) pairs and the
+    not-yet-fetched output futures."""
+
+    def __init__(self, packed, outputs):
+        self.packed: List[Tuple[int, ServeRequest]] = packed
+        self.outputs = outputs
+
+
+class FleetEngine:
+    """Multi-device continuous-batching front-end over the cognitive
+    tick.  ``mesh="auto"`` shards over the largest visible-device count
+    dividing the batch (single device => local, bit-compatible with
+    ``CognitiveEngine``); pass an explicit mesh or ``None`` to pin."""
+
+    def __init__(self, npu_params, cfg: SNNConfig,
+                 isp_cfg: Optional[ISPConfig] = None, *,
+                 fleet_cfg: Optional[FleetConfig] = None,
+                 mesh="auto",
+                 enc_cfg: Optional[EncodingConfig] = None,
+                 control_order: str = "pipeline",
+                 collect_sparsity: bool = False,
+                 frame_hw: Optional[tuple] = None,
+                 clock: Callable[[], float] = time.perf_counter):
+        self.fleet_cfg = fleet_cfg if fleet_cfg is not None else FleetConfig()
+        fc = self.fleet_cfg
+        if mesh == "auto":
+            mesh = make_serving_mesh(fc.batch) if fc.shard else None
+        self.mesh = mesh
+        self.core = EngineCore(
+            npu_params, cfg, isp_cfg, batch=fc.batch, frame_hw=frame_hw,
+            control_order=control_order, enc_cfg=enc_cfg,
+            collect_sparsity=collect_sparsity, mesh=mesh)
+        self.cfg = cfg
+        self.batch = fc.batch
+        self.clock = clock
+        self._step = self.core._step        # executable-cache introspection
+        self.buffers = DoubleBuffer(
+            lambda: StagingBank(cfg, fc.batch, self.core.frame_hw,
+                                self.core.enc_cfg.event_capacity),
+            enabled=fc.double_buffer)
+        self.queue = AdmissionQueue(fc.max_queue)
+        self._inflight: Optional[_Inflight] = None
+        self.ticks = 0
+        self.last_tick_s = 0.0
+        self._latencies: List[float] = []   # delivered-request latency_s
+        self.n_delivered = 0
+        self.n_deadline_missed = 0
+
+    # ------------------------------------------------------------------
+    # client edge
+    # ------------------------------------------------------------------
+    def submit(self, req: PerceptionRequest, *,
+               deadline_ms: Optional[float] = None) -> ServeRequest:
+        """Admit a request (voxel- or event-carrying) into the bounded
+        queue.  Returns the wrapping ``ServeRequest`` — check
+        ``.status``: ``QUEUED`` on admission, ``REJECTED`` when the
+        queue is full (admission control; nothing was copied).
+        ``deadline_ms`` is measured from now; omitted requests inherit
+        ``FleetConfig.default_deadline_ms``."""
+        kind = validate_request(req, self.cfg.in_channels)
+        now = self.clock()
+        if deadline_ms is None:
+            deadline_ms = self.fleet_cfg.default_deadline_ms
+        sreq = ServeRequest(
+            request=req, kind=kind,
+            deadline=None if deadline_ms is None
+            else now + deadline_ms / 1e3)
+        self.queue.offer(sreq, now)
+        return sreq
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def step(self) -> List[ServeRequest]:
+        """One scheduler round: shed expired queued work, pack free
+        slots from the queue into the front staging bank, dispatch it,
+        then harvest the previous in-flight tick.  Returns every
+        request that REACHED A TERMINAL STATUS this round — delivered
+        (``DONE``, with ``request.result`` populated) and shed
+        (``EXPIRED``, ``result`` None) alike, so expiry is an explicit
+        result status, never a stall."""
+        t0 = time.perf_counter()
+        now = self.clock()
+        terminal: List[ServeRequest] = list(self.queue.shed_expired(now))
+
+        # pack: continuous batching fills every slot the queue can
+        bank = self.buffers.front
+        packed: List[Tuple[int, ServeRequest]] = []
+        while len(packed) < self.batch and len(self.queue):
+            sreq = self.queue.pop_ready(now)
+            if sreq is None:
+                break
+            if sreq.expired(now):           # raced past its deadline
+                sreq.status = RequestStatus.EXPIRED
+                self.queue.n_expired += 1
+                terminal.append(sreq)
+                continue
+            slot = len(packed)
+            stage_request(bank, slot, sreq.request, sreq.kind,
+                          self.core.enc_cfg)
+            sreq.telemetry.t_admit = now
+            packed.append((slot, sreq))
+        for slot in range(len(packed), self.batch):
+            bank.from_events[slot] = False  # recycled slots stay inert
+
+        # dispatch the new tick BEFORE blocking on the old one: the
+        # upload + launch are queued asynchronously, so the H2D copy of
+        # tick N+1 overlaps tick N's device compute
+        new_inflight = None
+        if packed:
+            dev = self.core.upload(bank.as_tuple())   # ONE device_put
+            outputs = self.core.dispatch(dev)         # async launch
+            t_disp = self.clock()
+            for _, sreq in packed:
+                sreq.status = RequestStatus.IN_FLIGHT
+                sreq.telemetry.t_dispatch = t_disp
+            new_inflight = _Inflight(packed, outputs)
+            self.buffers.flip()
+            self.ticks += 1
+
+        # harvest: block on the PREVIOUS tick's results (pipeline depth
+        # 2 with double buffering; without it, harvest this very tick)
+        if self.fleet_cfg.double_buffer:
+            harvest, self._inflight = self._inflight, new_inflight
+        else:
+            harvest, self._inflight = new_inflight, None
+        if harvest is not None:
+            terminal.extend(self._deliver(harvest))
+        self.last_tick_s = time.perf_counter() - t0
+        return terminal
+
+    def _deliver(self, inflight: _Inflight) -> List[ServeRequest]:
+        out, rgb, sp = self.core.fetch(inflight.outputs)
+        now = self.clock()
+        spars = None
+        if out.layer_rates is not None:
+            spars = {k: float(v) for k, v in out.layer_rates.items()}
+        done = []
+        for slot, sreq in inflight.packed:
+            tel = sreq.telemetry
+            tel.t_deliver = now
+            tel.deadline_missed = sreq.expired(now)
+            sreq.request.result = PerceptionResult(
+                rgb=rgb[slot], control=out.control[slot],
+                raw_pred=out.raw_pred[slot],
+                stage_params=jax.tree_util.tree_map(
+                    lambda x, s=slot: x[s], sp),
+                sparsity=spars, telemetry=tel)
+            sreq.status = RequestStatus.DONE
+            self._latencies.append(tel.latency_s)
+            self.n_delivered += 1
+            self.n_deadline_missed += bool(tel.deadline_missed)
+            done.append(sreq)
+        return done
+
+    def drain(self, max_steps: int = 10000) -> List[ServeRequest]:
+        """Step until the queue and the pipeline are empty; returns
+        every request that reached a terminal status while draining."""
+        finished: List[ServeRequest] = []
+        for _ in range(max_steps):
+            if not len(self.queue) and self._inflight is None:
+                break
+            finished.extend(self.step())
+        return finished
+
+    def run_to_completion(self, requests: List[PerceptionRequest],
+                          max_steps: int = 10000) -> List[ServeRequest]:
+        """Submit-then-drain convenience mirroring
+        ``CognitiveEngine.run_to_completion`` (admission control still
+        applies: the returned list includes REJECTED submits)."""
+        submitted = [self.submit(r) for r in requests]
+        rejected = [s for s in submitted
+                    if s.status is RequestStatus.REJECTED]
+        return rejected + self.drain(max_steps)
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        """Serving envelope over every delivered request: p50/p99
+        latency (seconds) and counters for shed/rejected work."""
+        lat = sorted(self._latencies)
+        n = len(lat)
+
+        def pct(p):
+            return lat[min(n - 1, int(p * n))] if n else float("nan")
+
+        return {
+            "delivered": self.n_delivered,
+            "rejected": self.queue.n_rejected,
+            "expired": self.queue.n_expired,
+            "deadline_missed": self.n_deadline_missed,
+            "ticks": self.ticks,
+            "n_devices": self.core.n_devices,
+            "latency_p50_s": pct(0.50),
+            "latency_p99_s": pct(0.99),
+        }

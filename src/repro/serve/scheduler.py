@@ -1,0 +1,128 @@
+"""Request lifecycle for continuous-batching perception serving:
+admission control, per-request deadlines, and telemetry.
+
+The paper's target envelope is ADAS/UAV perception, where a stale
+frame is WORSE than a dropped one — a detection delivered after the
+control deadline can't steer anything.  So deadlines are first-class:
+
+* ``deadline_ms`` is measured from ENQUEUE.  A queued request whose
+  deadline passes before a slot frees up is SHED — status ``EXPIRED``,
+  ``result`` stays ``None`` — instead of occupying a slot and stalling
+  fresher work (load shedding, not head-of-line blocking).
+* A request that made it into a tick always completes; if it lands
+  after its deadline it is still delivered (the compute is spent) but
+  flagged ``telemetry.deadline_missed`` so clients can discard it.
+* Admission control is a bounded queue: ``submit`` beyond ``max_queue``
+  returns status ``REJECTED`` immediately (backpressure at the edge,
+  the "millions of users" failure mode handled explicitly).
+
+Telemetry records the four lifecycle timestamps
+(enqueue -> admit -> dispatch -> deliver) on every request and rides
+back on ``PerceptionResult.telemetry``; latency percentiles in
+``benchmarks/serve_bench.py`` reduce over exactly these.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Deque, List, Optional
+
+
+class RequestStatus(enum.Enum):
+    QUEUED = "queued"          # admitted to the bounded queue
+    REJECTED = "rejected"      # queue full at submit (admission control)
+    IN_FLIGHT = "in_flight"    # packed into a dispatched tick
+    DONE = "done"              # result delivered
+    EXPIRED = "expired"        # deadline passed while queued: shed
+
+
+@dataclasses.dataclass
+class RequestTelemetry:
+    """Lifecycle timestamps (seconds on the serving clock, typically
+    ``time.perf_counter``) + deadline accounting."""
+    t_enqueue: float = 0.0
+    t_admit: float = 0.0       # packed into a staging slot
+    t_dispatch: float = 0.0    # tick executable launched (compute start)
+    t_deliver: float = 0.0     # result fetched back to the host
+    deadline_missed: bool = False
+
+    @property
+    def latency_s(self) -> float:
+        """Submit-to-delivery wall time (the SLO axis)."""
+        return self.t_deliver - self.t_enqueue
+
+    @property
+    def queue_s(self) -> float:
+        return self.t_admit - self.t_enqueue
+
+    @property
+    def compute_s(self) -> float:
+        return self.t_deliver - self.t_dispatch
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    """A ``PerceptionRequest`` wrapped with serving state.  ``deadline``
+    is an ABSOLUTE clock value (None = no deadline); the fleet converts
+    the client-facing relative ``deadline_ms`` at enqueue."""
+    request: "object"                       # PerceptionRequest
+    deadline: Optional[float] = None
+    kind: str = "voxels"                    # staging path: voxels|events
+    status: RequestStatus = RequestStatus.QUEUED
+    telemetry: RequestTelemetry = dataclasses.field(
+        default_factory=RequestTelemetry)
+
+    @property
+    def rid(self):
+        return self.request.rid
+
+    def expired(self, now: float) -> bool:
+        return self.deadline is not None and now > self.deadline
+
+
+class AdmissionQueue:
+    """Bounded FIFO with deadline shedding.  Pure host-side state — a
+    fake ``now`` drives it deterministically in tests."""
+
+    def __init__(self, max_depth: int):
+        if max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1, got {max_depth}")
+        self.max_depth = max_depth
+        self._q: Deque[ServeRequest] = collections.deque()
+        self.n_rejected = 0
+        self.n_expired = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def offer(self, sreq: ServeRequest, now: float) -> bool:
+        """Admit or reject (bounded depth).  Stamps ``t_enqueue``."""
+        sreq.telemetry.t_enqueue = now
+        if len(self._q) >= self.max_depth:
+            sreq.status = RequestStatus.REJECTED
+            self.n_rejected += 1
+            return False
+        sreq.status = RequestStatus.QUEUED
+        self._q.append(sreq)
+        return True
+
+    def shed_expired(self, now: float) -> List[ServeRequest]:
+        """Drop every queued request whose deadline has passed (from
+        anywhere in the queue — expiry is not FIFO) and return them
+        with status ``EXPIRED``."""
+        shed = [r for r in self._q if r.expired(now)]
+        if shed:
+            self._q = collections.deque(
+                r for r in self._q if not r.expired(now))
+            for r in shed:
+                r.status = RequestStatus.EXPIRED
+            self.n_expired += len(shed)
+        return shed
+
+    def pop_ready(self, now: float) -> Optional[ServeRequest]:
+        """Next admissible request (skipping/shedding expired heads is
+        the caller's job via :meth:`shed_expired`); None when empty."""
+        if not self._q:
+            return None
+        return self._q.popleft()

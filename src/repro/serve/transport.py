@@ -1,0 +1,126 @@
+"""Host-side transport for the cognitive serving stack: numpy staging
+banks and the double-buffer that overlaps upload with compute.
+
+A submit is a memcpy into a :class:`StagingBank` slot — no device
+dispatch (the zero-copy discipline PR 3 established; asserted by the
+dispatch-counting engine test).  ``EngineCore.upload`` later moves a
+whole bank with ONE ``jax.device_put`` and donates the device buffers
+to the tick executable.
+
+:class:`DoubleBuffer` holds TWO banks.  While tick N computes on the
+device buffers uploaded from bank A (already donated — the host copy in
+bank A is dead the moment ``device_put`` returns), the scheduler packs
+tick N+1 into bank B and uploads it; JAX's async dispatch queues the
+N+1 launch behind N, so the host-side pack + H2D transfer of N+1 runs
+concurrently with N's compute.  This is the software analogue of the
+paper's ping-pong line buffers between the sensor front-end and the
+NPU.
+
+Request staging/validation is shared here so ``CognitiveEngine`` and
+``FleetEngine`` enforce identical payload rules (voxels XOR events,
+mandatory bayer frame, DVS channel layout, FIFO budgeting on overfull
+event windows).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.configs.base import EncodingConfig, SNNConfig
+from repro.core.encoding import EventStream, fit_stream
+
+
+class StagingBank:
+    """Host numpy slot buffers for one tick batch: DVS voxel windows,
+    Bayer frames, per-slot bounded event FIFOs, and the per-slot
+    encoded-vs-submitted flag.  Inactive slots carry zeros and ride
+    along in the fixed-shape executable."""
+
+    def __init__(self, cfg: SNNConfig, batch: int,
+                 frame_hw: Tuple[int, int], event_capacity: int):
+        H, W = frame_hw
+        self.voxels = np.zeros(
+            (cfg.time_steps, batch, cfg.height, cfg.width, cfg.in_channels),
+            np.float32)
+        self.bayer = np.zeros((batch, H, W), np.float32)
+        self.events = EventStream(
+            t=np.zeros((batch, event_capacity), np.float32),
+            x=np.zeros((batch, event_capacity), np.int32),
+            y=np.zeros((batch, event_capacity), np.int32),
+            p=np.zeros((batch, event_capacity), np.int32),
+            valid=np.zeros((batch, event_capacity), bool))
+        self.from_events = np.zeros((batch,), bool)
+
+    def stage_voxels(self, slot: int, voxels, bayer) -> None:
+        self.voxels[:, slot] = np.asarray(voxels, np.float32)
+        self.bayer[slot] = np.asarray(bayer, np.float32)
+        self.from_events[slot] = False
+
+    def stage_events(self, slot: int, ev: EventStream, bayer) -> None:
+        """``ev`` must already fit the bank's FIFO capacity (see
+        :func:`stage_request`, which budgets overfull windows)."""
+        self.events.t[slot] = np.asarray(ev.t, np.float32)
+        self.events.x[slot] = np.asarray(ev.x, np.int32)
+        self.events.y[slot] = np.asarray(ev.y, np.int32)
+        self.events.p[slot] = np.asarray(ev.p, np.int32)
+        self.events.valid[slot] = np.asarray(ev.valid, bool)
+        self.bayer[slot] = np.asarray(bayer, np.float32)
+        self.from_events[slot] = True
+
+    def as_tuple(self):
+        """The slot pytree in ``EngineCore.upload`` argument order."""
+        return (self.voxels, self.bayer, self.events, self.from_events)
+
+
+class DoubleBuffer:
+    """Two staging banks, flipped every dispatched tick.  ``front`` is
+    the bank being packed for the NEXT tick; ``flip()`` after its upload
+    so the other (whose device copy was donated) becomes packable."""
+
+    def __init__(self, make_bank, enabled: bool = True):
+        self.banks = [make_bank(), make_bank()] if enabled else [make_bank()]
+        self.idx = 0
+
+    @property
+    def front(self) -> StagingBank:
+        return self.banks[self.idx]
+
+    def flip(self) -> None:
+        self.idx = (self.idx + 1) % len(self.banks)
+
+
+def validate_request(req, in_channels: int,
+                     events_only: bool = False) -> str:
+    """Payload validation shared by every submit path.  Returns the
+    staging kind ``"voxels"`` | ``"events"`` or raises ValueError with
+    the engine's historical messages."""
+    if events_only or req.voxels is None:
+        if req.events is None:
+            if events_only:
+                raise ValueError(f"request {req.rid} carries no events")
+            raise ValueError(f"request {req.rid}: neither voxels nor "
+                             f"events")
+        if req.bayer is None:
+            raise ValueError(f"request {req.rid} carries no bayer frame")
+        if in_channels != 2:
+            raise ValueError("event ingestion needs in_channels=2 "
+                             "(DVS polarity channels)")
+        return "events"
+    if req.bayer is None:
+        raise ValueError(f"request {req.rid} carries no bayer frame")
+    return "voxels"
+
+
+def stage_request(bank: StagingBank, slot: int, req, kind: str,
+                  enc_cfg: EncodingConfig) -> None:
+    """Stage a validated request into a bank slot (host memcpy only).
+    Event windows are coerced to the bounded per-slot FIFO:
+    under-full windows validity-padded, overfull ones budgeted to the
+    ``enc_cfg.event_capacity`` earliest events."""
+    if kind == "events":
+        bank.stage_events(slot, fit_stream(req.events,
+                                           enc_cfg.event_capacity),
+                          req.bayer)
+    else:
+        bank.stage_voxels(slot, req.voxels, req.bayer)

@@ -1,0 +1,62 @@
+"""bench_diff regression guard: ratio math, skip rules (zero baseline,
+noise floor, asymmetric row sets), and the CLI exit codes CI relies
+on."""
+import json
+import subprocess
+import sys
+
+from benchmarks.bench_diff import diff, load_rows, main, selftest
+
+
+def _bench(rows):
+    return {"schema": 1, "created_unix": 0.0, "smoke": True,
+            "rows": [{"name": n, "us_per_call": u, "derived": ""}
+                     for n, u in rows.items()]}
+
+
+def test_diff_flags_only_true_regressions():
+    old = {"tick": 1000.0, "kern": 400.0, "gone": 9.0}
+    new = {"tick": 2000.0, "kern": 410.0, "born": 9.0}
+    reg, imp, cmpd = diff(old, new, tol=1.5, min_us=50.0)
+    assert [r[0] for r in reg] == ["tick"]
+    assert reg[0][3] == 2.0
+    assert not imp and len(cmpd) == 2     # gone/born not compared
+
+
+def test_diff_skips_zero_baseline_and_noise_floor():
+    old = {"dead": 0.0, "tiny": 3.0, "real": 100.0}
+    new = {"dead": 500.0, "tiny": 30.0, "real": 100.0}
+    reg, _, cmpd = diff(old, new, tol=1.5, min_us=50.0)
+    assert not reg and [c[0] for c in cmpd] == ["real"]
+    # ...but a row crossing the noise floor IS compared
+    reg, _, _ = diff({"tiny": 3.0}, {"tiny": 300.0}, tol=1.5, min_us=50.0)
+    assert [r[0] for r in reg] == ["tiny"]
+
+
+def test_diff_reports_improvements_without_failing():
+    reg, imp, _ = diff({"a": 900.0}, {"a": 100.0}, tol=1.5, min_us=50.0)
+    assert not reg and [i[0] for i in imp] == ["a"]
+
+
+def test_selftest_passes():
+    assert selftest(tol=1.5, min_us=50.0) == 0
+
+
+def test_cli_exit_codes(tmp_path):
+    p_old = tmp_path / "BENCH_0.json"
+    p_new = tmp_path / "BENCH_1.json"
+    p_old.write_text(json.dumps(_bench({"tick": 100.0})))
+    p_new.write_text(json.dumps(_bench({"tick": 100.0})))
+    assert main([str(p_old), str(p_new)]) == 0          # identity: clean
+    p_new.write_text(json.dumps(_bench({"tick": 1000.0})))
+    assert main([str(p_old), str(p_new)]) == 1          # regression
+    assert main([str(p_old), str(p_new), "--tol", "20"]) == 0
+    assert load_rows(str(p_old)) == {"tick": 100.0}
+
+
+def test_cli_subprocess_selftest():
+    proc = subprocess.run(
+        [sys.executable, "benchmarks/bench_diff.py", "--selftest"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+    assert "selftest OK" in proc.stdout

@@ -1,0 +1,61 @@
+"""Detector-training throughput + AP trajectory (paper §IV-B/C).
+
+Rows:
+  train_step_detector_<backend>  us_per_call = steady-state step wall
+                                 time; derived = loss trajectory
+  train_data_pipeline            us_per_call = per-batch synthetic-scene
+                                 generation cost (host-side data path)
+  ap_at_0.5                      us_per_call = total train wall us for
+                                 the jnp run; derived = untrained ->
+                                 trained AP@0.5 over `stepsN`
+
+``--smoke`` collapses the runs to 2 steps (health/schema check, not a
+measurement — the CI train-smoke lane owns the real AP assertion).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import smoke_reps, time_us
+from repro.configs.registry import TRAIN_CONFIGS
+from repro.train.detector import make_data_fn, resolve_snn_config, \
+    train_detector
+from repro.distributed.sharding import MeshAxes
+
+STEPS_JNP = 150
+STEPS_PALLAS = 20        # interpret-mode kernels on CPU: keep it short
+
+
+def _train_row(emit, name: str, steps: int):
+    tc = dataclasses.replace(TRAIN_CONFIGS[name], steps=steps,
+                             log_every=10 ** 9)
+    quiet = lambda *a, **k: None
+    t0 = time.perf_counter()
+    report = train_detector(tc, log=quiet)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    losses = [h["loss"] for h in report.history]
+    emit(f"train_step_detector_{tc.backend}",
+         report.step_time_s * 1e6,
+         f"loss{np.mean(losses[:5]):.2f}->{np.mean(losses[-5:]):.2f}")
+    return report, wall_us
+
+
+def run(emit):
+    # data pipeline cost (host-side scene synthesis, no sharding)
+    tc = TRAIN_CONFIGS["detector_smoke"]
+    data = make_data_fn(tc, resolve_snn_config(tc), MeshAxes())
+    emit("train_data_pipeline",
+         time_us(lambda: jax.block_until_ready(data(0)), reps=3),
+         f"batch{tc.batch}")
+
+    report, wall_us = _train_row(emit, "detector_smoke",
+                                 smoke_reps(STEPS_JNP, 2))
+    steps = len(report.history)
+    emit("ap_at_0.5", wall_us,
+         f"{report.ap_before:.4f}->{report.ap_after:.4f}_steps{steps}")
+
+    _train_row(emit, "detector_smoke_pallas", smoke_reps(STEPS_PALLAS, 2))

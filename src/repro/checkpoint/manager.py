@@ -36,22 +36,33 @@ class CheckpointManager:
         self.keep = keep
         self.async_write = async_write
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # ------------------------------------------------------------- save
     def save(self, step: int, tree: Any, blocking: bool = False):
         """Snapshot ``tree`` at ``step``. Gathers to host synchronously,
-        serialises asynchronously."""
+        serialises asynchronously.  A failure in a previous async write
+        is re-raised here (via ``wait()``) — a lost checkpoint must
+        never stay silent."""
         flat, treedef = jax.tree_util.tree_flatten(tree)
         host = [np.asarray(x) for x in flat]   # device->host (sync point)
         paths = _tree_paths(tree)
         self.wait()
         if self.async_write and not blocking:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host, paths), daemon=True)
+                target=self._guarded_write, args=(step, host, paths),
+                daemon=True)
             self._thread.start()
         else:
             self._write(step, host, paths)
+
+    def _guarded_write(self, step: int, host, paths):
+        """Background-thread entry: capture, don't swallow, failures."""
+        try:
+            self._write(step, host, paths)
+        except BaseException as e:          # noqa: BLE001 — re-raised later
+            self._error = e
 
     def _write(self, step: int, host: List[np.ndarray], paths: List[str]):
         tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
@@ -86,8 +97,14 @@ class CheckpointManager:
                           ignore_errors=True)
 
     def wait(self):
-        if self._thread is not None and self._thread.is_alive():
+        """Join any in-flight async write; re-raise its failure (once)."""
+        if self._thread is not None:
             self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "async checkpoint write failed (checkpoint lost)") from err
 
     # ---------------------------------------------------------- restore
     def all_steps(self) -> List[int]:

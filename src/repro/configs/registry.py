@@ -13,7 +13,7 @@ from repro.configs import base
 from repro.configs.base import (DEFAULT_ISP_STAGES, EncodingConfig,
                                 FleetConfig, ISPConfig, MLAConfig,
                                 ModelConfig, MoEConfig, SNNConfig, SSMConfig,
-                                ShapeConfig)
+                                ShapeConfig, TrainConfig)
 
 # ---------------------------------------------------------------------------
 # Assigned architectures (shapes per brief; sources in DESIGN.md)
@@ -258,6 +258,29 @@ def get_encoding_config(name: str) -> EncodingConfig:
 # ---------------------------------------------------------------------------
 # Named fleet-serving profiles (repro.serve.fleet policies)
 # ---------------------------------------------------------------------------
+
+# ---------------------------------------------------------------------------
+# Named detector training runs (repro.train.detector)
+# ---------------------------------------------------------------------------
+
+TRAIN_CONFIGS: Dict[str, TrainConfig] = {
+    # CI-sized CPU smoke: a few hundred steps on synthetic scenes is
+    # enough to lift AP@0.5 from ~0.00 to >=0.15 (asserted in the
+    # train-smoke lane)
+    "detector_smoke": TrainConfig(name="detector_smoke", steps=300),
+    # same run through the kernel-backed spiking layers (grads match
+    # the jnp path to <=1e-5, so the trajectory is near-identical)
+    "detector_smoke_pallas": TrainConfig(name="detector_smoke_pallas",
+                                         backend="pallas", steps=300),
+    # longer single-host run at the full paper dims
+    "detector": TrainConfig(name="detector", reduced=False, steps=2000,
+                            warmup=100, ckpt_every=200),
+}
+
+
+def get_train_config(name: str) -> TrainConfig:
+    return TRAIN_CONFIGS[name]
+
 
 FLEET_CONFIGS: Dict[str, FleetConfig] = {
     # balanced default: sharded, double-buffered, bounded queue

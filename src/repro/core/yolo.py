@@ -129,6 +129,25 @@ def _iou_np(a, b):
     return inter / np.maximum(ar_a[:, None] + ar_b[None] - inter, 1e-9)
 
 
+def nms_greedy(boxes: np.ndarray, iou_thresh: float = 0.5) -> np.ndarray:
+    """Greedy NMS over score-DESCENDING boxes -> kept indices.
+
+    Same selection as the textbook pairwise loop (keep box i iff its IoU
+    with every previously kept box is < ``iou_thresh``), but one [N, N]
+    IoU matrix + row-wise suppression instead of the O(N^2) pure-Python
+    pair loop."""
+    n = len(boxes)
+    if n == 0:
+        return np.zeros((0,), np.int64)
+    iou = _iou_np(boxes, boxes)
+    idx = np.arange(n)
+    keep = np.ones(n, bool)
+    for i in range(n):
+        if keep[i]:
+            keep &= (iou[i] < iou_thresh) | (idx <= i)
+    return idx[keep]
+
+
 def average_precision(pred_boxes: List[np.ndarray],
                       pred_scores: List[np.ndarray],
                       gt_boxes: List[np.ndarray],
@@ -142,12 +161,7 @@ def average_precision(pred_boxes: List[np.ndarray],
         pb, ps = pb[keep], ps[keep]
         order = np.argsort(-ps)
         pb, ps = pb[order], ps[order]
-        # greedy NMS
-        sel = []
-        for i in range(len(pb)):
-            if all(_iou_np(pb[i:i + 1], pb[j:j + 1])[0, 0] < 0.5
-                   for j in sel):
-                sel.append(i)
+        sel = nms_greedy(pb)
         pb, ps = pb[sel], ps[sel]
         n_gt += len(gb)
         matched = np.zeros(len(gb), bool)

@@ -48,32 +48,45 @@ def _render_boxes(boxes, valid, H, W):
 def _events_from_motion(rng, boxes, valid, vel, n_events, H, W,
                         time_steps: int):
     """Events fire at moving object edges: sample points along each box
-    boundary at sub-window times, polarity from the motion direction."""
-    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    boundary at sub-window times, polarity from the motion direction.
+    A small fraction of the budget is true background sensor noise:
+    uniform position and random polarity (NOT box-locked — noise events
+    carrying the edge geometry of *invalid* boxes would hand the
+    detector unlabeled objects)."""
+    k1, k2, k3, k4, k5, k6 = jax.random.split(rng, 6)
     M = boxes.shape[0]
-    per = n_events // M
-    t = jax.random.uniform(k1, (M, per))
+    # round-robin object assignment uses the FULL event budget (the old
+    # [M, n_events // M] layout silently dropped n_events % M events)
+    obj = jnp.arange(n_events) % M
+    t = jax.random.uniform(k1, (n_events,))
     # choose an edge point of the (moving) box at event time
-    u = jax.random.uniform(k2, (M, per))
-    side = jax.random.randint(k3, (M, per), 0, 4)
-    cx = boxes[:, 1:2] + vel[:, 0:1] * (t - 0.5) * 0.2
-    cy = boxes[:, 2:3] + vel[:, 1:2] * (t - 0.5) * 0.2
-    bw, bh = boxes[:, 3:4], boxes[:, 4:5]
+    u = jax.random.uniform(k2, (n_events,))
+    side = jax.random.randint(k3, (n_events,), 0, 4)
+    b = boxes[obj]                                   # [N, 5]
+    v = vel[obj]                                     # [N, 2]
+    cx = b[:, 1] + v[:, 0] * (t - 0.5) * 0.2
+    cy = b[:, 2] + v[:, 1] * (t - 0.5) * 0.2
+    bw, bh = b[:, 3], b[:, 4]
     ex = jnp.where(side % 2 == 0, cx + (u - 0.5) * bw,
                    cx + jnp.where(side == 1, bw / 2, -bw / 2))
     ey = jnp.where(side % 2 == 1, cy + (u - 0.5) * bh,
                    cy + jnp.where(side == 0, -bh / 2, bh / 2))
     # polarity: leading edge ON, trailing edge OFF (w.r.t. velocity)
-    lead = (ex - cx) * vel[:, 0:1] + (ey - cy) * vel[:, 1:2] > 0
+    lead = (ex - cx) * v[:, 0] + (ey - cy) * v[:, 1] > 0
     pol = lead.astype(jnp.int32)
+    ok = valid[obj] & (jnp.abs(v).sum(-1) > 0.05)
+    # background noise events: uniform over the FOV, coin-flip polarity
+    noise = jax.random.uniform(k4, (n_events,)) < 0.02
+    nu = jax.random.uniform(k5, (n_events, 2))
+    ex = jnp.where(noise, nu[:, 0], ex)
+    ey = jnp.where(noise, nu[:, 1], ey)
+    pol = jnp.where(noise,
+                    jax.random.bernoulli(k6, 0.5, (n_events,))
+                    .astype(jnp.int32), pol)
+    ok = ok | noise
     x = jnp.clip((ex * W).astype(jnp.int32), 0, W - 1)
     y = jnp.clip((ey * H).astype(jnp.int32), 0, H - 1)
-    ok = valid[:, None] & (jnp.abs(vel).sum(-1, keepdims=True) > 0.05)
-    # background noise events (sensor noise)
-    noise = jax.random.uniform(k4, (M, per)) < 0.02
-    ok = ok | noise
-    return EventStream(t=t.reshape(-1), x=x.reshape(-1), y=y.reshape(-1),
-                       p=pol.reshape(-1), valid=ok.reshape(-1))
+    return EventStream(t=t, x=x, y=y, p=pol, valid=ok)
 
 
 def make_scene(rng, *, height: int = 64, width: int = 64,
@@ -82,7 +95,7 @@ def make_scene(rng, *, height: int = 64, width: int = 64,
                wb_drift: Tuple[float, float] = (1.0, 1.0),
                noise_sigma: float = 0.02,
                defect_rate: float = 0.002):
-    ks = jax.random.split(rng, 8)
+    ks = jax.random.split(rng, 9)
     M = max_boxes
     n_obj = jax.random.randint(ks[0], (), 1, M + 1)
     cls = jax.random.bernoulli(ks[1], 0.5, (M,)).astype(jnp.float32)
@@ -109,7 +122,9 @@ def make_scene(rng, *, height: int = 64, width: int = 64,
                        jnp.where(is_b, shifted[..., 2], shifted[..., 1]))
     mosaic = mosaic + noise_sigma * jax.random.normal(ks[6], mosaic.shape)
     defects = jax.random.uniform(ks[7], mosaic.shape) < defect_rate
-    hot = jax.random.uniform(ks[0], mosaic.shape) > 0.5
+    # dedicated key: reusing ks[0] here correlated the object count
+    # with which defective pixels read hot vs dead
+    hot = jax.random.uniform(ks[8], mosaic.shape) > 0.5
     mosaic = jnp.where(defects, jnp.where(hot, 1.0, 0.0), mosaic)
     mosaic = jnp.clip(mosaic, 0.0, 1.0)
 

@@ -41,11 +41,26 @@ def global_norm(tree) -> jax.Array:
                         for l in leaves))
 
 
+# Exact path segments that carry no weight decay: mamba's per-channel
+# D / A_log / dt_bias and the attention bias vectors.  Segment-exact
+# matching — the old '"/d" in path' substring test silently disabled
+# decay on every kernel whose name starts with "d" (the YOLO backbone's
+# "/d0" downsample convs, mobilenet's "/dw0" depthwise kernels, any
+# "/dense" or "/decoder" layer).
+_NO_DECAY_SEGMENTS = frozenset({"d", "a_log", "dt_bias", "bq", "bk", "bv"})
+# Substrings that mark a segment as norm/bias/scale-like ("norm_scale",
+# "qkv_bias", ...) — these are whole-name conventions, not prefixes of
+# kernel names, so substring matching within one segment is safe.
+_NO_DECAY_SUBSTRINGS = ("norm", "bias", "scale")
+
+
 def _decay_mask(path: str) -> bool:
-    """No weight decay on norms/biases/scalars."""
-    lowered = path.lower()
-    return not any(s in lowered for s in ("norm", "bias", "scale", "a_log",
-                                          "dt_bias", "/d",))
+    """No weight decay on norms/biases/per-channel scalars."""
+    segments = path.lower().split("/")
+    if any(s in _NO_DECAY_SEGMENTS for s in segments):
+        return False
+    return not any(sub in seg for seg in segments
+                   for sub in _NO_DECAY_SUBSTRINGS)
 
 
 def adamw_update(params, grads, opt_state, cfg: AdamWConfig,

@@ -1,2 +1,6 @@
+from repro.train.detector import (DetectorTrainState,  # noqa: F401
+                                  evaluate_detector, init_detector_state,
+                                  make_detector_train_step, train_detector)
 from repro.train.state import TrainState, init_train_state  # noqa: F401
 from repro.train.step import make_train_step  # noqa: F401
+from repro.train.trainer import Trainer  # noqa: F401

@@ -41,8 +41,21 @@ class Trainer:
         self.log(f"[trainer] resumed from step {latest}")
         return latest
 
+    def _drain(self, pending) -> None:
+        """Materialise buffered on-device metrics into ``history``."""
+        for step, dt, metrics in pending:
+            rec = {k: float(v) for k, v in
+                   jax.device_get(metrics).items()}
+            rec["step"] = step
+            rec["dt_s"] = dt
+            self.history.append(rec)
+        pending.clear()
+
     def run(self, num_steps: int, start_step: Optional[int] = None) -> Any:
         step0 = self.maybe_resume() if start_step is None else start_step
+        # metrics stay on-device between log points: float(v) per step
+        # would force a device sync and block async dispatch
+        pending: list = []
         for step in range(step0, num_steps):
             t0 = time.monotonic()
             batch = self.data_fn(step)      # deterministic in step
@@ -50,16 +63,16 @@ class Trainer:
             dt = time.monotonic() - t0
             if self.monitor is not None:
                 self.monitor.heartbeat("worker0", step_time_s=dt)
-            rec = {k: float(v) for k, v in metrics.items()}
-            rec["step"] = step
-            rec["dt_s"] = dt
-            self.history.append(rec)
+            pending.append((step, dt, metrics))
             if step % self.log_every == 0:
+                self._drain(pending)
+                rec = self.history[-1]
                 msg = " ".join(f"{k}={v:.4f}" for k, v in rec.items()
                                if k in ("loss", "ce", "grad_norm", "recon"))
                 self.log(f"[trainer] step={step} {msg} ({dt:.2f}s)")
             if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
                 self.ckpt.save(step + 1, self.state)
+        self._drain(pending)
         if self.ckpt is not None:
             self.ckpt.save(num_steps, self.state, blocking=True)
         return self.state

@@ -147,6 +147,52 @@ def check_manual_dp_compression_step():
     print(f"  compressed-dp: losses={[round(l,3) for l in losses]} ok")
 
 
+def check_detector_dp_matches_local():
+    """Data-parallel spiking-YOLO training (sharded batch + replicated
+    state over the ("data",) serving mesh) == the single-device step."""
+    from repro.configs.registry import TRAIN_CONFIGS
+    from repro.train.detector import (init_detector_state, make_data_fn,
+                                      make_detector_train_step,
+                                      make_train_mesh, replicate_state,
+                                      resolve_snn_config)
+
+    tc = dataclasses.replace(TRAIN_CONFIGS["detector_smoke"], batch=8)
+    cfg = resolve_snn_config(tc)
+    opt = AdamWConfig(lr=tc.lr, weight_decay=tc.weight_decay,
+                      grad_clip=tc.grad_clip)
+    mesh = make_train_mesh(tc)
+    assert mesh is not None and mesh.axis_names == ("data",), mesh
+    ax = from_mesh(mesh)
+
+    def run(ax_, ctx):
+        state = init_detector_state(jax.random.PRNGKey(tc.seed), cfg, opt)
+        step = make_detector_train_step(cfg, opt)
+        data = make_data_fn(tc, cfg, ax_)
+        with ctx:
+            state = replicate_state(state, ax_)
+            losses = []
+            for s in range(2):
+                state, m = step(state, data(s))
+                losses.append(float(m["loss"]))
+        return state, losses
+
+    class _null:
+        def __enter__(self):
+            return None
+
+        def __exit__(self, *a):
+            return False
+
+    st_l, lo_l = run(MeshAxes(), _null())
+    st_d, lo_d = run(ax, _mesh_context(mesh))
+    assert np.allclose(lo_l, lo_d, rtol=1e-5), (lo_l, lo_d)
+    for a, b in zip(jax.tree_util.tree_leaves(st_l),
+                    jax.tree_util.tree_leaves(st_d)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+    print(f"  detector-dp: {ax.dp_size}-way losses={lo_d} == local ok")
+
+
 def check_pipeline_parallel():
     from repro.distributed.pipeline_parallel import (bubble_fraction,
                                                      pipeline_forward)
@@ -175,5 +221,6 @@ if __name__ == "__main__":
     check_sharded_decode_matches_local()
     check_sharded_train_step_runs()
     check_manual_dp_compression_step()
+    check_detector_dp_matches_local()
     check_pipeline_parallel()
     print("ALL DISTRIBUTED CHECKS PASSED")

@@ -43,6 +43,28 @@ def test_retention(tmp_path):
     assert cm.all_steps() == [3, 4]
 
 
+def test_async_write_failure_surfaces(tmp_path):
+    """A failed background serialise must raise on the next wait()/save,
+    not vanish with the thread (a lost checkpoint must never be silent).
+    After the raise the manager is usable again."""
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    boom = lambda *a, **k: (_ for _ in ()).throw(IOError("disk full"))
+    cm._write = boom
+    cm.save(1, _tree())
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        cm.wait()
+    # next save also surfaces a pending failure (no wait() call needed)
+    cm._write = boom
+    cm.save(2, _tree())
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        cm.save(3, _tree())
+    # error is cleared once raised; subsequent writes succeed
+    del cm.__dict__["_write"]
+    cm.save(4, _tree())
+    cm.wait()
+    assert cm.latest_step() == 4
+
+
 def test_corruption_detected(tmp_path):
     cm = CheckpointManager(str(tmp_path), async_write=False)
     t = _tree()

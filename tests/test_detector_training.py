@@ -1,0 +1,183 @@
+"""End-to-end spiking-YOLO detector training (paper §IV-B/C): the loss
+actually descends, both SNN backends take the same optimisation step,
+kill-and-resume replays the uninterrupted trajectory bit-exactly, and
+the AP@0.5 / NMS eval metric matches hand-computed fixtures.
+
+Also regression-tests the synthetic-event generator fixes: the full
+event budget is spent (no ``n_events % M`` silent drop) and background
+noise is uniform over the FOV rather than locked to (possibly invalid)
+box edges.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import TRAIN_CONFIGS
+from repro.core.yolo import average_precision, nms_greedy
+from repro.data.synthetic import _events_from_motion
+from repro.distributed.sharding import MeshAxes
+from repro.optim.adamw import AdamWConfig
+from repro.train.detector import (init_detector_state, make_data_fn,
+                                  make_detector_train_step, resolve_snn_config,
+                                  resume_from, train_detector)
+
+
+def _opt(tc):
+    return AdamWConfig(lr=tc.lr, weight_decay=tc.weight_decay,
+                       grad_clip=tc.grad_clip)
+
+
+def _maxrel(ta, tb):
+    def one(a, b):
+        a, b = np.asarray(a), np.asarray(b)
+        return float(np.max(np.abs(a - b)) / (np.max(np.abs(b)) + 1e-30))
+    return max(jax.tree_util.tree_leaves(
+        jax.tree_util.tree_map(one, ta, tb)))
+
+
+# ---------------------------------------------------------------------------
+# training dynamics
+# ---------------------------------------------------------------------------
+
+def test_detector_loss_decreases():
+    tc = dataclasses.replace(TRAIN_CONFIGS["detector_smoke"], batch=4,
+                             shard=False)
+    cfg = resolve_snn_config(tc)
+    state = init_detector_state(jax.random.PRNGKey(0), cfg, _opt(tc))
+    step = make_detector_train_step(cfg, _opt(tc))
+    data = make_data_fn(tc, cfg, MeshAxes())
+    losses = []
+    for s in range(30):
+        state, m = step(state, data(s))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < 0.8 * np.mean(losses[:5]), losses
+    assert int(state.step) == 30
+
+
+def test_detector_step_backend_parity():
+    """The same AdamW step through the jnp and pallas spike paths lands
+    on matching params (surrogate grads agree to <=1e-5; one step of
+    Adam keeps them within 1e-4)."""
+    tc = dataclasses.replace(TRAIN_CONFIGS["detector_smoke"], batch=2,
+                             shard=False)
+    data = make_data_fn(tc, resolve_snn_config(tc), MeshAxes())
+    scene = data(0)
+    outs = {}
+    for backend in ("jnp", "pallas"):
+        cfg = resolve_snn_config(dataclasses.replace(tc, backend=backend))
+        state = init_detector_state(jax.random.PRNGKey(0), cfg, _opt(tc))
+        step = make_detector_train_step(cfg, _opt(tc))
+        state, m = step(state, scene)
+        assert np.isfinite(float(m["loss"]))
+        outs[backend] = (state.params, float(m["loss"]))
+    assert outs["pallas"][1] == pytest.approx(outs["jnp"][1], rel=1e-5)
+    assert _maxrel(outs["pallas"][0], outs["jnp"][0]) <= 1e-4
+
+
+@pytest.mark.timeout(600)
+def test_train_detector_resume_bitexact(tmp_path):
+    """Kill-and-resume: restoring the mid-run checkpoint and replaying
+    must land on bit-identical params + optimizer moments (the data
+    stream is keyed on the step counter, the step fn is deterministic,
+    and checkpoints round-trip float32 exactly)."""
+    tc = dataclasses.replace(
+        TRAIN_CONFIGS["detector_smoke"], steps=6, batch=2, ckpt_every=2,
+        eval_batches=1, eval_batch=2, log_every=10 ** 9, shard=False)
+    quiet = lambda *a, **k: None
+    report = train_detector(tc, ckpt_dir=str(tmp_path), eval_before=False,
+                            log=quiet)
+    resumed = resume_from(tc, str(tmp_path), at_step=4, log=quiet)
+    for a, b in zip(jax.tree_util.tree_leaves(report.state),
+                    jax.tree_util.tree_leaves(resumed)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# eval metric fixtures
+# ---------------------------------------------------------------------------
+
+def test_average_precision_hand_computed():
+    gt = np.array([[0.0, 0.0, 1.0, 1.0]])
+    tp = np.array([[0.0, 0.0, 1.0, 1.0]])
+    fp = np.array([[2.0, 2.0, 3.0, 3.0]])
+    # higher-scored FP then TP: recall steps 0->1 at precision 1/2
+    ap = average_precision([np.concatenate([fp, tp])],
+                           [np.array([0.9, 0.8])], [gt])
+    assert ap == pytest.approx(0.5)
+    # perfect single detection
+    assert average_precision([tp], [np.array([0.9])], [gt]) \
+        == pytest.approx(1.0)
+    # no predictions / no ground truth
+    empty_b, empty_s = np.zeros((0, 4)), np.zeros((0,))
+    assert average_precision([empty_b], [empty_s], [gt]) == 0.0
+    assert average_precision([fp], [np.array([0.9])],
+                             [np.zeros((0, 4))]) == 0.0
+
+
+def test_average_precision_duplicate_detections_penalised():
+    """Second hit on an already-matched gt counts as FP (VOC rule).
+    The duplicate pair overlaps the gt >= 0.5 but each other < 0.5, so
+    NMS keeps both and the matcher must do the penalising."""
+    gt = np.array([[0.0, 0.0, 1.0, 1.0], [3.0, 0.0, 4.0, 1.0]])
+    p1 = np.array([0.0, 0.0, 1.0, 0.7])    # IoU(gt0)=0.70  -> TP
+    p2 = np.array([0.0, 0.35, 1.0, 1.0])   # IoU(gt0)=0.65, IoU(p1)=0.35 -> FP
+    p3 = np.array([3.0, 0.0, 4.0, 1.0])    # IoU(gt1)=1.0   -> TP
+    ap = average_precision([np.stack([p1, p2, p3])],
+                           [np.array([0.9, 0.8, 0.7])], [gt])
+    # records TP,FP,TP over 2 gt: AP = 0.5*1 + 0.5*(2/3)
+    assert ap == pytest.approx(0.5 + 0.5 * 2 / 3)
+
+
+def test_nms_greedy_chain():
+    """b overlaps kept a (suppressed); c overlaps only the *suppressed*
+    b, so c survives — greedy must test against kept boxes only."""
+    boxes = np.array([[0.0, 0.0, 1.0, 1.0],     # a (top score)
+                      [0.3, 0.0, 1.3, 1.0],     # b: IoU(a)=0.54
+                      [0.6, 0.0, 1.6, 1.0]])    # c: IoU(a)=0.25, IoU(b)=0.54
+    np.testing.assert_array_equal(nms_greedy(boxes), [0, 2])
+    assert nms_greedy(np.zeros((0, 4))).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# synthetic event generator regressions
+# ---------------------------------------------------------------------------
+
+def _boxes(M=4):
+    cls = jnp.zeros((M,))
+    cxy = jnp.full((M, 2), 0.5)
+    wh = jnp.full((M, 2), 0.2)
+    return jnp.concatenate([cls[:, None], cxy, wh], -1)
+
+
+def test_event_budget_fully_used():
+    """n_events % M must not be dropped: 10 events over 4 moving valid
+    boxes -> all 10 live (the old [M, n//M] layout kept only 8)."""
+    ev = _events_from_motion(jax.random.PRNGKey(0), _boxes(4),
+                             jnp.ones((4,), bool), jnp.full((4, 2), 0.5),
+                             10, 64, 64, 3)
+    assert ev.valid.shape == (10,)
+    assert int(ev.valid.sum()) == 10
+
+
+def test_noise_events_uniform_not_box_locked():
+    """With every box invalid only background noise fires — and it must
+    cover the FOV uniformly instead of inheriting the invalid boxes'
+    edge geometry (which would hand the detector unlabeled objects)."""
+    ev = _events_from_motion(jax.random.PRNGKey(1), _boxes(4),
+                             jnp.zeros((4,), bool), jnp.full((4, 2), 0.5),
+                             8192, 64, 64, 3)
+    v = np.asarray(ev.valid)
+    x = np.asarray(ev.x)[v] / 64.0
+    y = np.asarray(ev.y)[v] / 64.0
+    assert 50 < v.sum() < 1000             # ~2% noise rate
+    # box edges all live in [0.4, 0.6]; uniform noise spans the FOV
+    assert x.std() > 0.2 and y.std() > 0.2
+    for q in (x < 0.25, x > 0.75, y < 0.25, y > 0.75):
+        assert q.mean() > 0.1
+    # polarity is a fair coin, not motion-correlated
+    p = np.asarray(ev.p)[v]
+    assert 0.3 < p.mean() < 0.7

@@ -1,0 +1,85 @@
+"""AdamW decay-mask semantics + functional weight-decay behaviour.
+
+Regression for the over-broad '"/d" in path' substring rule that
+silently disabled weight decay on every parameter whose path contained
+a segment *starting* with "d" — the YOLO backbone's /d0 downsample
+convs, mobilenet's /dw0 depthwise kernels, any /dense or /decoder
+layer.  The mask must match exact path segments for single-letter
+per-channel scalars and name conventions (norm/bias/scale) only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim.adamw import (AdamWConfig, _decay_mask, adamw_init,
+                               adamw_update)
+
+# (path, should_decay) — real parameter paths from the repo's inits:
+# backbones.py names stages d{i}/f{i} (yolo), dw{i}/pw{i} (mobilenet);
+# mamba carries per-channel D / A_log / dt_bias; attention bq/bk/bv.
+DECAYED = [
+    "backbone/d0/w",        # yolo downsample conv — the old bug's victim
+    "backbone/d1/w",
+    "backbone/dw0/w",       # mobilenet depthwise kernel
+    "backbone/f0/w",
+    "mlp/dense/w",          # "/dense" contains "/d" as a substring
+    "decoder/w",            # "/decoder" too
+    "head/conv/w",
+    "attn/wq",
+    "blocks/3/w",
+]
+UNDECAYED = [
+    "norm_scale",           # whole-name conventions
+    "block/norm/scale",
+    "head/bias",
+    "conv/scale",           # folded-BN per-channel scale
+    "qkv_bias",
+    "mamba/D",              # exact-segment per-channel scalars
+    "mamba/A_log",
+    "mamba/dt_bias",
+    "attn/bq",              # attention bias vectors
+    "attn/bk",
+    "attn/bv",
+]
+
+
+def test_decay_mask_segments():
+    for path in DECAYED:
+        assert _decay_mask(path), f"{path} must receive weight decay"
+    for path in UNDECAYED:
+        assert not _decay_mask(path), f"{path} must NOT receive decay"
+
+
+def test_weight_decay_applied_per_mask():
+    """Zero grads + weight_decay: decayed params shrink by lr*wd*p
+    exactly, mask-exempt params stay bit-identical."""
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5, grad_clip=0.0)
+    params = {"backbone": {"d0": {"w": jnp.ones((3, 3))}},
+              "norm": {"scale": jnp.ones((4,))},
+              "mamba": {"D": jnp.ones((4,))}}
+    grads = jax.tree_util.tree_map(jnp.zeros_like, params)
+    opt = adamw_init(params, cfg)
+    new, _, _ = adamw_update(params, grads, opt, cfg)
+    np.testing.assert_allclose(
+        np.asarray(new["backbone"]["d0"]["w"]),
+        1.0 - cfg.lr * cfg.weight_decay, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(new["norm"]["scale"]), 1.0)
+    np.testing.assert_array_equal(np.asarray(new["mamba"]["D"]), 1.0)
+
+
+def test_real_detector_params_decay_coverage():
+    """On the actual spiking-YOLO init tree the conv kernels (w) decay
+    and the folded-BN scale/bias vectors do not."""
+    from repro.configs.registry import reduced_snn
+    from repro.core.npu import init_npu
+    cfg = reduced_snn("spiking_yolo")
+    params = init_npu(jax.random.PRNGKey(0), cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    paths = ["/".join(str(getattr(k, "key", k)) for k in kp)
+             for kp, _ in flat]
+    kernels = [p for p in paths if p.endswith("/w")]
+    assert kernels, "expected conv kernels in the detector tree"
+    assert all(_decay_mask(p) for p in kernels), \
+        [p for p in kernels if not _decay_mask(p)]
+    vecs = [p for p in paths if p.endswith(("/scale", "/bias"))]
+    assert vecs and all(not _decay_mask(p) for p in vecs)

@@ -13,7 +13,14 @@ Rules of the comparison:
   at CPU-timer granularity a 2us -> 5us flip is noise, not signal;
 * rows at exactly 0.0 in the OLD run are skipped (a zero baseline has
   no meaningful ratio; the dead tile-skip rows of PRs 3-5 read 0.000);
-* improvements are reported but never fail.
+* improvements are reported but never fail;
+* ``--normalize`` divides every ratio by the median ratio across the
+  compared rows before judging it against ``--tol``.  A baseline
+  recorded on one machine and a candidate run on another differ by a
+  roughly uniform speed factor; the median absorbs that factor so the
+  guard flags rows that regressed RELATIVE to the rest of the suite.
+  This is the mode CI uses against the committed
+  ``benchmarks/baselines/BENCH_baseline.json``.
 
 ``--selftest`` fabricates a regression in-memory and asserts the
 comparator flags it (and that an identity diff passes) — so the CI
@@ -35,22 +42,34 @@ def load_rows(path: str) -> dict:
     return {r["name"]: float(r["us_per_call"]) for r in rows}
 
 
-def diff(old: dict, new: dict, tol: float, min_us: float):
+def _median(xs):
+    s = sorted(xs)
+    mid = len(s) // 2
+    return s[mid] if len(s) % 2 else 0.5 * (s[mid - 1] + s[mid])
+
+
+def diff(old: dict, new: dict, tol: float, min_us: float,
+         normalize: bool = False):
     """Returns (regressions, improvements, compared) lists of
-    (name, old_us, new_us, ratio)."""
-    regressions, improvements, compared = [], [], []
+    (name, old_us, new_us, ratio).  With ``normalize`` the reported
+    ratio is new/old divided by the median new/old over the compared
+    rows (cross-machine comparisons: the uniform speed factor between
+    two hosts cancels, leaving only relative movement)."""
+    compared = []
     for name in sorted(set(old) & set(new)):
         o, n = old[name], new[name]
         if o <= 0.0:
             continue                      # dead/zero baseline: no ratio
         if o < min_us and n < min_us:
             continue                      # both under the noise floor
-        ratio = n / o
-        compared.append((name, o, n, ratio))
-        if ratio > tol:
-            regressions.append((name, o, n, ratio))
-        elif ratio < 1.0 / tol:
-            improvements.append((name, o, n, ratio))
+        compared.append((name, o, n, n / o))
+    if normalize and compared:
+        med = _median([r for _, _, _, r in compared])
+        if med > 0.0:
+            compared = [(name, o, n, r / med)
+                        for name, o, n, r in compared]
+    regressions = [c for c in compared if c[3] > tol]
+    improvements = [c for c in compared if c[3] < 1.0 / tol]
     return regressions, improvements, compared
 
 
@@ -82,7 +101,17 @@ def selftest(tol: float, min_us: float) -> int:
     assert len(cmpd) == 2, cmpd
     reg0, _, _ = diff(old, dict(old), tol, min_us)
     assert not reg0, reg0                 # identity diff must pass
-    print("# selftest OK: regression detected, identity clean")
+    # --normalize: a uniformly 2x-slower machine is NOT a regression,
+    # but a row that regressed relative to the rest still fires
+    slow_host = {"a": 1000.0, "b": 400.0, "c": 900.0, "d": 250.0}
+    uniform = {k: v * 2.0 for k, v in slow_host.items()}
+    regn, _, _ = diff(slow_host, uniform, tol, min_us, normalize=True)
+    assert not regn, regn
+    uniform["a"] *= tol * 1.3             # one row slips further
+    regn, _, _ = diff(slow_host, uniform, tol, min_us, normalize=True)
+    assert [r[0] for r in regn] == ["a"], regn
+    print("# selftest OK: regression detected, identity clean, "
+          "normalize absorbs uniform host factor")
     return 0
 
 
@@ -94,6 +123,9 @@ def main(argv=None) -> int:
                     help="max allowed new/old ratio (default 1.5)")
     ap.add_argument("--min-us", type=float, default=50.0,
                     help="skip rows under this in both runs (noise)")
+    ap.add_argument("--normalize", action="store_true",
+                    help="divide ratios by their median (cross-machine "
+                         "baselines: uniform host speed factor cancels)")
     ap.add_argument("--selftest", action="store_true",
                     help="verify the comparator can fire, then exit")
     args = ap.parse_args(argv)
@@ -102,7 +134,8 @@ def main(argv=None) -> int:
     if not args.old or not args.new:
         ap.error("OLD and NEW bench files are required (or --selftest)")
     reg, imp, cmpd = diff(load_rows(args.old), load_rows(args.new),
-                          args.tol, args.min_us)
+                          args.tol, args.min_us,
+                          normalize=args.normalize)
     return _report(reg, imp, cmpd, args.tol)
 
 

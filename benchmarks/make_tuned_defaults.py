@@ -1,0 +1,77 @@
+"""Regenerate the packaged tuning table
+``src/repro/kernels/tuned_defaults.json`` — the out-of-the-box launch
+configs the dispatch chain falls back to when no explicit table, env
+table, or live tuning context is active (see ``repro.kernels.tune``).
+
+Sweeps every shape the repo's hot paths hit on this machine:
+
+* all four reduced SNN backbones on the high-sparsity moving_bar
+  voxels (the bench/CI scenario — real activation sparsity, so the
+  gate-mode winners are honest), and
+* the detector training forward (batch 8 spiking-YOLO — the
+  ``train_step_detector_pallas_tuned`` shapes),
+
+then writes the merged winners.  Run on the target machine class:
+
+    PYTHONPATH=src:. python benchmarks/make_tuned_defaults.py
+
+The table is versioned (schema + KERNELS_VERSION); a stale committed
+table is invalidated wholesale at load time, never half-applied, and
+every entry is bit-exact by construction (the sweep only ranks configs
+whose accumulation order is canonical — tests/test_tune.py).
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import SNN_ARCHS, get_tune_config, reduced_snn
+from repro.core.encoding import events_to_voxel_batch
+from repro.core.npu import init_npu, npu_forward
+from repro.data.synthetic import make_scenario_batch
+from repro.kernels import tune
+
+
+def main() -> int:
+    table = tune.TuningTable()
+    tcfg = get_tune_config("default")
+
+    H, W, T, B, N_EV = 32, 32, 3, 2, 2048
+    evs = make_scenario_batch("moving_bar", jax.random.PRNGKey(2), B,
+                              height=H, width=W, n_events=N_EV,
+                              noise_frac=0.0, vertical=False,
+                              speed=0.25, bar_width=0.05)
+    vox = jnp.swapaxes(events_to_voxel_batch(
+        evs, time_steps=T, height=H, width=W), 0, 1)
+    for name in sorted(SNN_ARCHS):
+        cfg = reduced_snn(name, backend="pallas")
+        params = init_npu(jax.random.PRNGKey(1), cfg)
+        with tune.tuning(table, tcfg):
+            npu_forward(params, vox, cfg)
+        print(f"# {name}: {len(table.entries)} entries so far",
+              file=sys.stderr)
+
+    # detector training forward (batch 8) — the train-bench shapes
+    from repro.configs.registry import TRAIN_CONFIGS
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.detector import (detector_loss, init_detector_state,
+                                      make_data_fn, resolve_snn_config)
+    from repro.distributed.sharding import MeshAxes
+    tc = TRAIN_CONFIGS["detector_smoke_pallas"]
+    cfg = resolve_snn_config(tc)
+    state = init_detector_state(jax.random.PRNGKey(tc.seed), cfg,
+                                AdamWConfig())
+    with tune.tuning(table, tcfg):
+        detector_loss(state.params,
+                      make_data_fn(tc, cfg, MeshAxes())(0), cfg)
+
+    table.save(tune.DEFAULT_TABLE_PATH)
+    print(f"# wrote {tune.DEFAULT_TABLE_PATH} "
+          f"({len(table.entries)} entries)", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

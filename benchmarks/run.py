@@ -12,6 +12,10 @@
 #
 # ``--smoke``: run every bench once (REPRO_BENCH_SMOKE=1 collapses reps
 # and training loops) and validate the emitted JSON — the CI lane.
+# ``--tune-smoke``: bound the kernel-autotuner sweeps to the "smoke"
+# TuneConfig (REPRO_TUNE_SMOKE=1: fewer reps, harder roofline pruning)
+# without collapsing the bench timings themselves — the CI bench lane
+# passes both so the tuned rows are measured but the sweep stays cheap.
 import glob
 import json
 import os
@@ -74,6 +78,8 @@ def main(argv=None) -> None:
     smoke = "--smoke" in argv
     if smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+    if "--tune-smoke" in argv:
+        os.environ["REPRO_TUNE_SMOKE"] = "1"
     # --only <module>[,<module>...]: run a subset of the bench suite
     # (e.g. the CI serving-smoke lane runs ``--only serve`` under 8
     # forced host devices).  "npu" still includes the serving sweep it

@@ -3,6 +3,14 @@
 Rows:
   train_step_detector_<backend>  us_per_call = steady-state step wall
                                  time; derived = loss trajectory
+                                 (the pallas row is pinned to the
+                                 untuned defaults via ``tune.off()``
+                                 so its meaning is stable across PRs)
+  train_step_detector_pallas_tuned
+                                 same pallas run after an autotuning
+                                 sweep over the training forward's
+                                 shapes (fused conv->LIF + measured
+                                 block/gate winners; ISSUE 8)
   train_data_pipeline            us_per_call = per-batch synthetic-scene
                                  generation cost (host-side data path)
   ap_at_0.5                      us_per_call = total train wall us for
@@ -20,7 +28,7 @@ import time
 import jax
 import numpy as np
 
-from benchmarks.common import smoke_reps, time_us
+from benchmarks.common import is_smoke, smoke_reps, time_us
 from repro.configs.registry import TRAIN_CONFIGS
 from repro.train.detector import make_data_fn, resolve_snn_config, \
     train_detector
@@ -30,7 +38,7 @@ STEPS_JNP = 150
 STEPS_PALLAS = 20        # interpret-mode kernels on CPU: keep it short
 
 
-def _train_row(emit, name: str, steps: int):
+def _train_row(emit, name: str, steps: int, suffix: str = ""):
     tc = dataclasses.replace(TRAIN_CONFIGS[name], steps=steps,
                              log_every=10 ** 9)
     quiet = lambda *a, **k: None
@@ -38,10 +46,38 @@ def _train_row(emit, name: str, steps: int):
     report = train_detector(tc, log=quiet)
     wall_us = (time.perf_counter() - t0) * 1e6
     losses = [h["loss"] for h in report.history]
-    emit(f"train_step_detector_{tc.backend}",
+    emit(f"train_step_detector_{tc.backend}{suffix}",
          report.step_time_s * 1e6,
          f"loss{np.mean(losses[:5]):.2f}->{np.mean(losses[-5:]):.2f}")
     return report, wall_us
+
+
+def _tuned_train_row(emit, name: str, steps: int):
+    """``train_step_detector_pallas_tuned``: sweep the training
+    forward's shapes once (eager loss eval on a real batch — tuning
+    keys are forward shapes; the backward reuses the same launch
+    configs through the custom-VJP nondiff args), install the winners,
+    rerun the training row under the table."""
+    from repro.configs.registry import get_tune_config
+    from repro.kernels import tune
+    from repro.train.detector import detector_loss, init_detector_state
+    from repro.optim.adamw import AdamWConfig
+
+    tc = TRAIN_CONFIGS[name]
+    cfg = resolve_snn_config(tc)
+    data = make_data_fn(tc, cfg, MeshAxes())
+    state = init_detector_state(jax.random.PRNGKey(tc.seed), cfg,
+                                AdamWConfig())
+    table = tune.TuningTable()
+    tcfg = (get_tune_config("smoke") if is_smoke()
+            else tune.default_tune_config())
+    with tune.tuning(table, tcfg):
+        detector_loss(state.params, data(0), cfg)
+    tune.set_table(table)
+    try:
+        _train_row(emit, name, steps, suffix="_tuned")
+    finally:
+        tune.set_table(None)
 
 
 def run(emit):
@@ -58,4 +94,13 @@ def run(emit):
     emit("ap_at_0.5", wall_us,
          f"{report.ap_before:.4f}->{report.ap_after:.4f}_steps{steps}")
 
-    _train_row(emit, "detector_smoke_pallas", smoke_reps(STEPS_PALLAS, 2))
+    # pin the legacy row to the untuned defaults: its cross-PR meaning
+    # is "PR 5's per-op composition at stock 128 blocks", regardless of
+    # any packaged tuning table that ships later
+    from repro.kernels import tune
+    with tune.off():
+        _train_row(emit, "detector_smoke_pallas",
+                   smoke_reps(STEPS_PALLAS, 2))
+
+    _tuned_train_row(emit, "detector_smoke_pallas",
+                     smoke_reps(STEPS_PALLAS, 2))

@@ -313,6 +313,25 @@ class TrainConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class TuneConfig:
+    """One kernel-autotuner sweep policy (repro.kernels.tune).
+
+    Frozen/hashable like every other config.  The tuner measures REAL
+    layer inputs (so gate-mode wins reflect the actual activation
+    sparsity, not a synthetic density), ranks candidates with the
+    roofline launch estimate first, and only wall-clocks the
+    ``prune_to`` most promising configs ``reps`` times each.
+
+    ``smoke`` bounds the sweep for CI: fewer reps, harder pruning —
+    the table it produces is still valid, just less exhaustively
+    searched."""
+    name: str = "default"
+    reps: int = 5                   # timed repetitions per candidate
+    prune_to: int = 8               # candidates measured after roofline rank
+    max_candidates: int = 64        # hard cap on the enumerated space
+
+
+@dataclasses.dataclass(frozen=True)
 class SNNConfig:
     """Spiking backbone config (the paper's own architectures)."""
     name: str = "spiking_yolo"

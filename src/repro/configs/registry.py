@@ -13,7 +13,7 @@ from repro.configs import base
 from repro.configs.base import (DEFAULT_ISP_STAGES, EncodingConfig,
                                 FleetConfig, ISPConfig, MLAConfig,
                                 ModelConfig, MoEConfig, SNNConfig, SSMConfig,
-                                ShapeConfig, TrainConfig)
+                                ShapeConfig, TrainConfig, TuneConfig)
 
 # ---------------------------------------------------------------------------
 # Assigned architectures (shapes per brief; sources in DESIGN.md)
@@ -297,3 +297,21 @@ FLEET_CONFIGS: Dict[str, FleetConfig] = {
 
 def get_fleet_config(name: str) -> FleetConfig:
     return FLEET_CONFIGS[name]
+
+
+# ---------------------------------------------------------------------------
+# Named kernel-autotuner sweep policies (repro.kernels.tune)
+# ---------------------------------------------------------------------------
+
+TUNE_CONFIGS: Dict[str, TuneConfig] = {
+    # full sweep: every legal candidate roofline-ranked, top-8 measured
+    "default": TuneConfig(name="default"),
+    # CI-bounded sweep (benchmarks/run.py --tune-smoke): fewer reps,
+    # harder pruning — still a valid table, just less exhaustive
+    "smoke": TuneConfig(name="smoke", reps=2, prune_to=4,
+                        max_candidates=16),
+}
+
+
+def get_tune_config(name: str) -> TuneConfig:
+    return TUNE_CONFIGS[name]

@@ -97,10 +97,24 @@ def _conv2d(x, w, stride: int, depthwise: bool, cin: int):
 # Spike-im2col lowering (shared formulation of both backends)
 # ---------------------------------------------------------------------------
 
-# K-block of the jnp reference accumulation; MUST equal the gated conv
-# kernel's bk (repro.kernels.spike_conv.BK) — the blocking is the
-# bit-parity contract (asserted by tests/test_spike_conv.py).
-SPIKE_CONV_BLOCK = 128
+# K-block of the jnp reference accumulation — imported from the shared
+# single source of truth (repro.kernels.blocks, import-light: no jax),
+# so it CANNOT diverge from the kernels' canonical accumulation block
+# even while the autotuner sweeps launch ``bk`` shapes (every launch
+# K-step accumulates in canonical sub-blocks; see blocks.py).
+from repro.kernels.blocks import CANONICAL_K_BLOCK as SPIKE_CONV_BLOCK
+
+
+def blocked_matmul(a, b):
+    """[M, K] @ [K, N] accumulated in ``SPIKE_CONV_BLOCK`` K-chunks —
+    THE shared bit-parity formulation: the jnp reference conv, the
+    Pallas kernels' canonical sub-block loops, and the fused conv→LIF
+    backward's rematerialisation all compute exactly this."""
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float32)
+    for k0 in range(0, a.shape[1], SPIKE_CONV_BLOCK):
+        acc = acc + a[:, k0:k0 + SPIKE_CONV_BLOCK] \
+            @ b[k0:k0 + SPIKE_CONV_BLOCK]
+    return acc
 
 
 def _same_pads(size: int, k: int, stride: int):
@@ -173,11 +187,7 @@ def spike_conv_jnp(xf, w, *, stride: int = 1, depthwise: bool = False):
         return acc
     patches, (Ho, Wo) = spike_im2col(xf, kh, kw, stride)
     wmat = w.reshape(kh * kw * w.shape[2], w.shape[3])
-    K = patches.shape[1]
-    acc = jnp.zeros((patches.shape[0], wmat.shape[1]), jnp.float32)
-    for k0 in range(0, K, SPIKE_CONV_BLOCK):
-        acc = acc + patches[:, k0:k0 + SPIKE_CONV_BLOCK] \
-            @ wmat[k0:k0 + SPIKE_CONV_BLOCK]
+    acc = blocked_matmul(patches, wmat)
     return acc.reshape(N, Ho, Wo, wmat.shape[1])
 
 
@@ -214,6 +224,20 @@ def apply_spiking_conv(p, x, cfg: SNNConfig, *, stride: int = 1,
     # dry-run; EXPERIMENTS.md §Perf hillclimb C). (B*T, ...) keeps the
     # merged dim block-sharded by batch.
     xf = jnp.swapaxes(x, 0, 1).reshape(B * T, H, W, C)
+    if use_kernels and normalize and fire and not depthwise:
+        # the whole layer through one dispatch point: the tuner picks
+        # the fused conv→LIF kernel (conv output never leaves VMEM
+        # before the norm+affine+LIF epilogue) or the per-op
+        # composition, per (op, shape) — see repro.kernels.tune
+        from repro.kernels.ops import spike_conv_lif_op
+        out = spike_conv_lif_op(xf, p["w"], p["scale"], p["bias"],
+                                T=T, B=B, stride=stride,
+                                tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                                v_reset=cfg.v_reset,
+                                beta=cfg.surrogate_beta)
+        if tape is not None:
+            tape.record(tag or f"conv{len(tape.records)}", out)
+        return out
     if use_kernels:
         from repro.kernels.ops import spike_conv_op
         y = spike_conv_op(xf, p["w"], stride=stride, depthwise=depthwise)
@@ -222,7 +246,7 @@ def apply_spiking_conv(p, x, cfg: SNNConfig, *, stride: int = 1,
     _, Ho, Wo, Co = y.shape
     y = jnp.swapaxes(y.reshape(B, T, Ho, Wo, Co), 0, 1)
     if normalize and fire and use_kernels:
-        # the whole epilogue (stats + affine + T-step recurrence) in
+        # depthwise epilogue: stats + affine + T-step recurrence in
         # one VMEM-resident kernel pass
         from repro.kernels.ops import norm_affine_lif_op
         out = norm_affine_lif_op(y, p["scale"], p["bias"],

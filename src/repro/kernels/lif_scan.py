@@ -41,7 +41,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-BLOCK_N = 1024
+from repro.kernels.blocks import DEFAULT_LIF_BLOCK_N
+
+BLOCK_N = DEFAULT_LIF_BLOCK_N
 
 
 def _f32_decay(tau: float):
@@ -91,11 +93,23 @@ def lif_scan_pallas(currents, *, tau: float = 2.0, v_th: float = 1.0,
     return out[:, :N]
 
 
-def _norm_lif_kernel(y_ref, scale_ref, bias_ref, s_ref, u_ref, *,
-                     tau: float, v_th: float, v_reset: float,
-                     eps: float, T: int):
+def norm_affine_lif_epilogue(y, scale, bias, s_ref, u_ref, *,
+                             tau: float, v_th: float, v_reset: float,
+                             eps: float, T: int):
+    """The VMEM-resident spiking-conv epilogue, shared verbatim by
+    ``norm_affine_lif_pallas`` and the fused conv→LIF kernel
+    (``repro.kernels.spike_conv.spike_conv_lif_pallas``): per-channel
+    instance-norm statistics over (T, HW), the tdBN-style affine, and
+    the T-step LIF recurrence.
+
+    ``y``: resident values [T, 1, HW, C]; ``scale``/``bias``: [C]
+    values; writes spikes into ``s_ref`` ([T, 1, HW, C] block) using
+    ``u_ref`` ([1, HW, C]) as the membrane register file.  Because both
+    kernels run this exact function, conv→LIF fusion cannot drift from
+    the per-op path by construction — the bit-parity contract is shared
+    code, not parallel implementations.
+    """
     decay = _f32_decay(tau)
-    y = y_ref[...]                                 # [T, 1, HW, C]
     # per-channel instance-norm statistics over (T, HW) — the whole
     # reduction extent is resident, so one pass, no cross-program
     # accumulation (which would also break bit-parity with the jnp
@@ -103,7 +117,7 @@ def _norm_lif_kernel(y_ref, scale_ref, bias_ref, s_ref, u_ref, *,
     mu = jnp.mean(y, axis=(0, 2), keepdims=True)
     var = jnp.var(y, axis=(0, 2), keepdims=True)
     z = (y - mu) * jax.lax.rsqrt(var + eps)
-    z = z * scale_ref[...] + bias_ref[...]
+    z = z * scale + bias
 
     u_ref[...] = jnp.full_like(u_ref, v_reset)
 
@@ -115,6 +129,14 @@ def _norm_lif_kernel(y_ref, scale_ref, bias_ref, s_ref, u_ref, *,
         return 0
 
     jax.lax.fori_loop(0, T, step, 0)
+
+
+def _norm_lif_kernel(y_ref, scale_ref, bias_ref, s_ref, u_ref, *,
+                     tau: float, v_th: float, v_reset: float,
+                     eps: float, T: int):
+    norm_affine_lif_epilogue(y_ref[...], scale_ref[...], bias_ref[...],
+                             s_ref, u_ref, tau=tau, v_th=v_th,
+                             v_reset=v_reset, eps=eps, T=T)
 
 
 def norm_affine_lif_pallas(y, scale, bias, *, tau: float = 2.0,

@@ -20,6 +20,24 @@ through the jnp reference to float rounding.  Residuals are the raw
 inputs; intermediates (membrane trajectory, norm statistics) are
 rematerialised in the backward — the FlashAttention trade of recompute
 for HBM traffic.
+
+Tuned dispatch (ISSUE 8): the spiking ops are thin Python dispatchers
+now, not top-level jits.  Each call builds a shape key, resolves a
+``repro.kernels.tune.LaunchConfig`` (lru-cached, pure at trace time —
+so repeated traces of the same layer see ONE stable config and reuse
+one executable), and calls an inner jit whose static args carry the
+launch shapes / gate mode / fusion variant.  The config lookup must
+never happen INSIDE a jit body: a jitted table read would bake the
+epoch's value into the executable and silently serve stale configs
+after a table swap.  Under an active ``tune.tuning()`` context, the
+first eager call of an untuned shape runs the measured sweep on that
+call's real inputs (real activation sparsity) before dispatching.
+
+``spike_conv_lif_op`` is the fused layer op: the whole spiking-conv
+layer (im2col conv + instance-norm + affine + T-step LIF) through one
+dispatch point, routed to either the single-kernel fused path
+(``spike_conv_lif_pallas`` — one HBM round-trip) or the per-op
+composition, per the tuned config.
 """
 from __future__ import annotations
 
@@ -29,7 +47,9 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.core.layers import dw_patches, spike_im2col
+from repro.core.layers import (_same_pads, blocked_matmul, dw_patches,
+                               spike_im2col)
+from repro.kernels import tune
 from repro.kernels.demosaic import demosaic_pallas
 from repro.kernels.event_voxel import event_voxel_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -37,14 +57,21 @@ from repro.kernels.isp_fused import (pointwise_segment_pallas,
                                      stencil_segment_pallas)
 from repro.kernels.lif_scan import lif_scan_pallas, norm_affine_lif_pallas
 from repro.kernels.nlm import nlm_pallas
-from repro.kernels.spike_conv import (occupancy_mask, spike_conv_pallas,
-                                      spike_dwconv_pallas,
+from repro.kernels.spike_conv import (occupancy_mask, spike_conv_lif_pallas,
+                                      spike_conv_pallas, spike_dwconv_pallas,
                                       tap_occupancy_mask)
 from repro.kernels.spike_matmul import spike_matmul_pallas
 
 INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 NORM_EPS = 1e-6
+
+
+def _live_fraction(x) -> float:
+    """Eager live-activation fraction of a concrete spike tensor — the
+    roofline ranking discount the tuner uses (only evaluated on eager
+    tuning calls; never inside a trace)."""
+    return float(jnp.mean((x != 0).astype(jnp.float32)))
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -116,19 +143,20 @@ def _lif_bwd_scan(g, xs, ss, *, tau: float, v_th: float, v_reset: float,
 # lif_scan_op: kernel forward + surrogate BPTT backward
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
-def _lif_scan(currents, tau, v_th, v_reset, beta):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _lif_scan(currents, tau, v_th, v_reset, beta, block_n):
     T = currents.shape[0]
     out = lif_scan_pallas(currents.reshape(T, -1), tau=tau, v_th=v_th,
-                          v_reset=v_reset, interpret=INTERPRET)
+                          v_reset=v_reset, block_n=block_n,
+                          interpret=INTERPRET)
     return out.reshape(currents.shape)
 
 
-def _lif_scan_fwd(currents, tau, v_th, v_reset, beta):
-    return _lif_scan(currents, tau, v_th, v_reset, beta), currents
+def _lif_scan_fwd(currents, tau, v_th, v_reset, beta, block_n):
+    return _lif_scan(currents, tau, v_th, v_reset, beta, block_n), currents
 
 
-def _lif_scan_bwd(tau, v_th, v_reset, beta, currents, g):
+def _lif_scan_bwd(tau, v_th, v_reset, beta, block_n, currents, g):
     xs, ss = _lif_replay(currents, tau=tau, v_th=v_th, v_reset=v_reset)
     dz = _lif_bwd_scan(g, xs, ss, tau=tau, v_th=v_th, v_reset=v_reset,
                        beta=beta)
@@ -139,12 +167,30 @@ _lif_scan.defvjp(_lif_scan_fwd, _lif_scan_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("tau", "v_th", "v_reset",
-                                             "beta"))
+                                             "beta", "block_n"))
+def _lif_scan_jit(currents, *, tau, v_th, v_reset, beta, block_n):
+    return _lif_scan(currents, tau, v_th, v_reset, beta, block_n)
+
+
 def lif_scan_op(currents, tau: float = 2.0, v_th: float = 1.0,
                 v_reset: float = 0.0, beta: float = 4.0):
     """currents: [T, ...] -> spikes, kernel-backed + differentiable
-    (surrogate BPTT backward).  Folds trailing dims for the kernel."""
-    return _lif_scan(currents, tau, v_th, v_reset, beta)
+    (surrogate BPTT backward).  Folds trailing dims for the kernel;
+    the neuron block (``block_n``) is the tuned knob."""
+    T = currents.shape[0]
+    n_flat = 1
+    for d in currents.shape[1:]:
+        n_flat *= d
+    dims = dict(T=T, N=n_flat)
+    runner = None
+    live = 1.0
+    if tune.tuning_active() and tune.concrete(currents):
+        runner = lambda c: _lif_scan_jit(        # noqa: E731
+            currents, tau=tau, v_th=v_th, v_reset=v_reset, beta=beta,
+            block_n=c.bn)
+    cfg = tune.dispatch("lif_scan", dims, runner, live=live)
+    return _lif_scan_jit(currents, tau=tau, v_th=v_th, v_reset=v_reset,
+                         beta=beta, block_n=cfg.bn)
 
 
 # ---------------------------------------------------------------------------
@@ -218,16 +264,17 @@ def norm_affine_lif_op(y, scale, bias, *, tau: float = 2.0,
 # spike_matmul_op: tile-skip forward + plain matmul backward
 # ---------------------------------------------------------------------------
 
-@jax.custom_vjp
-def _spike_matmul(x, w):
-    return spike_matmul_pallas(x, w, interpret=INTERPRET)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def _spike_matmul(x, w, bm, bk, bn):
+    return spike_matmul_pallas(x, w, bm=bm, bk=bk, bn=bn,
+                               interpret=INTERPRET)
 
 
-def _spike_matmul_fwd(x, w):
-    return _spike_matmul(x, w), (x, w)
+def _spike_matmul_fwd(x, w, bm, bk, bn):
+    return _spike_matmul(x, w, bm, bk, bn), (x, w)
 
 
-def _spike_matmul_bwd(res, g):
+def _spike_matmul_bwd(bm, bk, bn, res, g):
     x, w = res
     # d/dx is dense (g is not a spike tensor); d/dw contracts over the
     # spike activations — the sparsity the forward exploits lives in x,
@@ -238,34 +285,49 @@ def _spike_matmul_bwd(res, g):
 _spike_matmul.defvjp(_spike_matmul_fwd, _spike_matmul_bwd)
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn"))
+def _spike_matmul_jit(x, w, *, bm, bk, bn):
+    return _spike_matmul(x, w, bm, bk, bn)
+
+
 def spike_matmul_op(x, w):
     """x: [M, K] spikes (0/1), w: [K, N] -> x @ w with whole-zero VMEM
     tiles skipping their MXU pass; differentiable (plain matmul
     adjoints — the Heaviside lives upstream in the LIF that produced
-    x, so no surrogate is needed here)."""
-    return _spike_matmul(x, w)
+    x, so no surrogate is needed here).  Launch tile shapes are tuned
+    per shape (repro.kernels.tune)."""
+    dims = dict(M=x.shape[0], K=x.shape[1], N=w.shape[1])
+    runner = None
+    live = 1.0
+    if tune.tuning_active() and tune.concrete(x, w):
+        live = _live_fraction(x)
+        runner = lambda c: _spike_matmul_jit(    # noqa: E731
+            x, w, bm=c.bm, bk=c.bk, bn=c.bn)
+    cfg = tune.dispatch("spike_matmul", dims, runner, live=live)
+    return _spike_matmul_jit(x, w, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn)
 
 
 # ---------------------------------------------------------------------------
 # spike_conv_op: spike-im2col lowering into the activity-gated conv path
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _spike_conv_mm(patches, wmat, gate):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5))
+def _spike_conv_mm(patches, wmat, gate, bm, bk, bn):
     if gate == "inline":
         # route through the existing tile-skip spike matmul (per-tile
         # jnp.any check inside the kernel)
-        return spike_matmul_pallas(patches, wmat, interpret=INTERPRET)
+        return spike_matmul_pallas(patches, wmat, bm=bm, bk=bk, bn=bn,
+                                   interpret=INTERPRET)
     return spike_conv_pallas(patches, wmat, gated=(gate == "mask"),
-                             interpret=INTERPRET)
+                             bm=bm, bk=bk, bn=bn, interpret=INTERPRET)
 
 
-def _spike_conv_mm_fwd(patches, wmat, gate):
-    return _spike_conv_mm(patches, wmat, gate), (patches, wmat)
+def _spike_conv_mm_fwd(patches, wmat, gate, bm, bk, bn):
+    return _spike_conv_mm(patches, wmat, gate, bm, bk, bn), \
+        (patches, wmat)
 
 
-def _spike_conv_mm_bwd(gate, res, g):
+def _spike_conv_mm_bwd(gate, bm, bk, bn, res, g):
     patches, wmat = res
     # d/dpatches is dense (g is not a spike tensor); d/dwmat contracts
     # over the spike patches — as with spike_matmul, the sparsity the
@@ -280,17 +342,17 @@ def _spike_conv_mm_bwd(gate, res, g):
 _spike_conv_mm.defvjp(_spike_conv_mm_fwd, _spike_conv_mm_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def _spike_dwconv(patches3, wflat, gate):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _spike_dwconv(patches3, wflat, gate, bm):
     return spike_dwconv_pallas(patches3, wflat, gated=(gate != "none"),
-                               interpret=INTERPRET)
+                               bm=bm, interpret=INTERPRET)
 
 
-def _spike_dwconv_fwd(patches3, wflat, gate):
-    return _spike_dwconv(patches3, wflat, gate), (patches3, wflat)
+def _spike_dwconv_fwd(patches3, wflat, gate, bm):
+    return _spike_dwconv(patches3, wflat, gate, bm), (patches3, wflat)
 
 
-def _spike_dwconv_bwd(gate, res, g):
+def _spike_dwconv_bwd(gate, bm, res, g):
     patches3, wflat = res
     return g[:, None, :] * wflat[None], \
         jnp.einsum("mtc,mc->tc", patches3, g)
@@ -300,9 +362,30 @@ _spike_dwconv.defvjp(_spike_dwconv_fwd, _spike_dwconv_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "depthwise",
-                                             "gate"))
+                                             "gate", "bm", "bk", "bn"))
+def _spike_conv_impl(xf, w, *, stride, depthwise, gate, bm, bk, bn):
+    kh, kw = w.shape[:2]
+    N = xf.shape[0]
+    if depthwise:
+        patches3, (Ho, Wo) = dw_patches(xf, kh, kw, stride)
+        y = _spike_dwconv(patches3, w.reshape(kh * kw, -1), gate, bm)
+    else:
+        patches, (Ho, Wo) = spike_im2col(xf, kh, kw, stride)
+        y = _spike_conv_mm(patches,
+                           w.reshape(kh * kw * w.shape[2], w.shape[3]),
+                           gate, bm, bk, bn)
+    return y.reshape(N, Ho, Wo, -1)
+
+
+def _conv_out_hw(xf, kh, kw, stride):
+    """Static SAME output extent (Python ints, for shape keys)."""
+    _, _, Ho = _same_pads(xf.shape[1], kh, stride)
+    _, _, Wo = _same_pads(xf.shape[2], kw, stride)
+    return Ho, Wo
+
+
 def spike_conv_op(xf, w, *, stride: int = 1, depthwise: bool = False,
-                  gate: str = "mask"):
+                  gate=None):
     """Activity-gated spiking conv.  xf: [N, H, W, C] folded spike
     tensor; w: [kh, kw, cin, cout] HWIO weights (depthwise:
     [kh, kw, 1, C]) -> [N, Ho, Wo, cout], SAME padding.
@@ -310,29 +393,151 @@ def spike_conv_op(xf, w, *, stride: int = 1, depthwise: bool = False,
     Lowers via spike-im2col (``repro.core.layers.spike_im2col``) into
     the tile-skip matmul kernels, so every conv kind — normal, strided,
     depthwise, 1x1 — inherits the event-driven MXU-tile skip.
-    ``gate``: "mask" (per-tile occupancy precomputed once per call —
-    the default the layer dispatch uses), "inline" (the spike_matmul
-    kernel's in-kernel jnp.any check; depthwise has no inline variant
-    and treats it as "mask"), or "none" (dense baseline for the
-    benchmark sweep).  Differentiable: plain matmul adjoints — the
-    surrogate gradient lives in the LIF epilogue downstream.
+    ``gate``: None (default) resolves the tuned gate mode for this
+    shape; "mask" forces the per-tile precomputed occupancy gate,
+    "inline" the spike_matmul kernel's in-kernel jnp.any check
+    (depthwise treats it as "mask"), "none" the dense baseline the
+    benchmark sweep compares against.  Launch tile shapes always come
+    from the tuned config.  Differentiable: plain matmul adjoints —
+    the surrogate gradient lives in the LIF epilogue downstream.
 
-    Bit-exact vs the jnp reference ``spike_conv_jnp`` (shared K-block /
-    tap-loop formulation) and allclose vs lax.conv SAME."""
-    if gate not in ("mask", "inline", "none"):
-        raise ValueError(f"gate must be 'mask', 'inline' or 'none', "
-                         f"got {gate!r}")
+    Bit-exact vs the jnp reference ``spike_conv_jnp`` (shared canonical
+    K-block / tap-loop formulation — for EVERY tuned block shape) and
+    allclose vs lax.conv SAME."""
+    if gate not in (None, "mask", "inline", "none"):
+        raise ValueError(f"gate must be None, 'mask', 'inline' or "
+                         f"'none', got {gate!r}")
     kh, kw = w.shape[:2]
-    N = xf.shape[0]
+    Ho, Wo = _conv_out_hw(xf, kh, kw, stride)
     if depthwise:
-        patches3, (Ho, Wo) = dw_patches(xf, kh, kw, stride)
-        y = _spike_dwconv(patches3, w.reshape(kh * kw, -1), gate)
+        op = "spike_dwconv"
+        dims = dict(M=xf.shape[0] * Ho * Wo, taps=kh * kw,
+                    C=xf.shape[3])
     else:
+        op = "spike_conv"
+        dims = dict(M=xf.shape[0] * Ho * Wo, K=kh * kw * w.shape[2],
+                    N=w.shape[3])
+    runner = None
+    live = 1.0
+    if tune.tuning_active() and tune.concrete(xf, w):
+        live = _live_fraction(xf)
+        runner = lambda c: _spike_conv_impl(     # noqa: E731
+            xf, w, stride=stride, depthwise=depthwise,
+            gate=(gate if gate is not None else c.gate),
+            bm=c.bm, bk=c.bk, bn=c.bn)
+    cfg = tune.dispatch(op, dims, runner, live=live)
+    return _spike_conv_impl(
+        xf, w, stride=stride, depthwise=depthwise,
+        gate=(gate if gate is not None else cfg.gate),
+        bm=cfg.bm, bk=cfg.bk, bn=cfg.bn)
+
+
+# ---------------------------------------------------------------------------
+# spike_conv_lif_op: the whole spiking-conv layer through one dispatch
+# point — fused conv→LIF kernel or per-op composition, per tuned config
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12))
+def _conv_lif(patches, wmat, scale, bias, T, B, HW, gate, bm, tau, v_th,
+              v_reset, beta):
+    return spike_conv_lif_pallas(
+        patches, wmat, scale, bias, T=T, B=B, HW=HW, tau=tau, v_th=v_th,
+        v_reset=v_reset, eps=NORM_EPS, gate=gate, bm=bm,
+        interpret=INTERPRET)
+
+
+def _conv_lif_fwd(patches, wmat, scale, bias, T, B, HW, gate, bm, tau,
+                  v_th, v_reset, beta):
+    out = _conv_lif(patches, wmat, scale, bias, T, B, HW, gate, bm, tau,
+                    v_th, v_reset, beta)
+    return out, (patches, wmat, scale, bias)
+
+
+def _conv_lif_bwd(T, B, HW, gate, bm, tau, v_th, v_reset, beta, res, g):
+    patches, wmat, scale, bias = res
+    # rematerialise the fused kernel's resident intermediates in the
+    # exact shared formulation: canonical K-blocked conv output, the
+    # per-(B, C) norm statistics, then the membrane trajectory — one
+    # recompute instead of three HBM spills from the forward kernel
+    y = blocked_matmul(patches, wmat)           # [B·T·HW, N], bit-exact
+    N = y.shape[-1]
+    y4 = jnp.swapaxes(y.reshape(B, T, HW, N), 0, 1)   # [T, B, HW, N]
+    yhat, r = _norm_stats(y4)
+    z = yhat * scale + bias
+    xs, ss = _lif_replay(z, tau=tau, v_th=v_th, v_reset=v_reset)
+    dz = _lif_bwd_scan(g, xs, ss, tau=tau, v_th=v_th, v_reset=v_reset,
+                       beta=beta)
+    dyhat = dz * scale
+    dscale = jnp.sum(dz * yhat, axis=(0, 1, 2))
+    dbias = jnp.sum(dz, axis=(0, 1, 2))
+    m1 = jnp.mean(dyhat, axis=(0, 2), keepdims=True)
+    m2 = jnp.mean(dyhat * yhat, axis=(0, 2), keepdims=True)
+    dy4 = r * (dyhat - m1 - yhat * m2)
+    dy = jnp.swapaxes(dy4, 0, 1).reshape(B * T * HW, N)
+    # conv adjoints are plain matmuls (sparsity lives in the patches;
+    # the Heaviside of THIS layer's spikes is handled by the surrogate
+    # above, the one that produced the patches by the upstream layer)
+    return dy @ wmat.T, patches.T @ dy, dscale, dbias
+
+
+_conv_lif.defvjp(_conv_lif_fwd, _conv_lif_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "T", "B", "stride", "fused", "gate", "bm", "bk", "bn", "tau",
+    "v_th", "v_reset", "beta"))
+def _conv_lif_apply(xf, w, scale, bias, *, T, B, stride, fused, gate,
+                    bm, bk, bn, tau, v_th, v_reset, beta):
+    kh, kw = w.shape[:2]
+    wmat = w.reshape(kh * kw * w.shape[2], w.shape[3])
+    if fused:
         patches, (Ho, Wo) = spike_im2col(xf, kh, kw, stride)
-        y = _spike_conv_mm(patches,
-                           w.reshape(kh * kw * w.shape[2], w.shape[3]),
-                           gate)
-    return y.reshape(N, Ho, Wo, -1)
+        out = _conv_lif(patches, wmat, scale, bias, T, B, Ho * Wo,
+                        gate, bm, tau, v_th, v_reset, beta)
+        return out.reshape(T, B, Ho, Wo, -1)
+    # per-op composition (the conv's own launch shapes resolve through
+    # its nested spike_conv dispatch at trace time)
+    y = spike_conv_op(xf, w, stride=stride, gate=gate)
+    _, Ho, Wo, Co = y.shape
+    y = jnp.swapaxes(y.reshape(B, T, Ho, Wo, Co), 0, 1)
+    return norm_affine_lif_op(y, scale, bias, tau=tau, v_th=v_th,
+                              v_reset=v_reset, beta=beta)
+
+
+def spike_conv_lif_op(xf, w, scale, bias, *, T: int, B: int,
+                      stride: int = 1, tau: float = 2.0,
+                      v_th: float = 1.0, v_reset: float = 0.0,
+                      beta: float = 4.0):
+    """The whole spiking-conv layer: conv + instance-norm + affine +
+    T-step LIF.  xf: [B·T, H, W, C] batch-major folded spike tensor;
+    w: [kh, kw, cin, cout] -> spikes [T, B, Ho, Wo, cout].
+
+    The tuned config decides the FUSION BOUNDARY per shape: the fused
+    single-kernel path (``spike_conv_lif_pallas`` — conv output stays
+    VMEM-resident through the epilogue, one HBM round-trip) or the
+    per-op composition (``spike_conv_op`` + ``norm_affine_lif_op``).
+    Both variants are bit-exact vs the jnp reference; the surrogate-
+    gradient custom VJP rematerialises the fused intermediates, so the
+    fused path is training-legal with grads matching the per-op path
+    to float rounding."""
+    kh, kw = w.shape[:2]
+    Ho, Wo = _conv_out_hw(xf, kh, kw, stride)
+    dims = dict(T=T, B=B, HW=Ho * Wo, K=kh * kw * w.shape[2],
+                N=w.shape[3])
+    runner = None
+    live = 1.0
+    if tune.tuning_active() and tune.concrete(xf, w, scale, bias):
+        live = _live_fraction(xf)
+        runner = lambda c: _conv_lif_apply(      # noqa: E731
+            xf, w, scale, bias, T=T, B=B, stride=stride, fused=c.fused,
+            gate=c.gate, bm=c.bm, bk=c.bk, bn=c.bn, tau=tau, v_th=v_th,
+            v_reset=v_reset, beta=beta)
+    cfg = tune.dispatch("conv_lif", dims, runner, live=live)
+    return _conv_lif_apply(
+        xf, w, scale, bias, T=T, B=B, stride=stride, fused=cfg.fused,
+        gate=cfg.gate, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn, tau=tau,
+        v_th=v_th, v_reset=v_reset, beta=beta)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "depthwise"))

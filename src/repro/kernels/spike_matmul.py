@@ -10,6 +10,12 @@ synthetic DVS data (see benchmarks/npu_bench.py).
 
 x: [M, K] spikes (0/1), w: [K, N] weights -> y = x @ w.
 Grid (M/bm, N/bn, K/bk); fp32 accumulation in VMEM scratch.
+
+Tuning note: ``bm/bn/bk`` are swept by ``repro.kernels.tune``.  The
+launch ``bk`` only sets the grid/gating granularity — inside a K-step
+the accumulator is updated in sequential ``CANONICAL_K_BLOCK`` sub-block
+dots (``canonical_k_slices``), so every swept block shape reproduces the
+jnp reference's float accumulation order bit-for-bit.
 """
 from __future__ import annotations
 
@@ -20,8 +26,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.blocks import canonical_k_slices
 
-def _kernel(x_ref, w_ref, y_ref, acc_ref, *, k_steps: int):
+
+def _kernel(x_ref, w_ref, y_ref, acc_ref, *, k_steps: int, bk: int):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -32,9 +40,10 @@ def _kernel(x_ref, w_ref, y_ref, acc_ref, *, k_steps: int):
 
     @pl.when(jnp.any(x != 0))          # event-driven tile skip
     def _mac():
-        acc_ref[...] += jnp.dot(x.astype(jnp.float32),
-                                w_ref[...].astype(jnp.float32),
-                                preferred_element_type=jnp.float32)
+        for c0, c1 in canonical_k_slices(bk):
+            acc_ref[...] += jnp.dot(x[:, c0:c1].astype(jnp.float32),
+                                    w_ref[c0:c1, :].astype(jnp.float32),
+                                    preferred_element_type=jnp.float32)
 
     @pl.when(k == k_steps - 1)
     def _flush():
@@ -43,7 +52,9 @@ def _kernel(x_ref, w_ref, y_ref, acc_ref, *, k_steps: int):
 
 def spike_matmul_pallas(x, w, *, bm: int = 128, bk: int = 128,
                         bn: int = 128, interpret: bool = True):
-    """x: [M, K] (spikes), w: [K, N] -> [M, N]."""
+    """x: [M, K] (spikes), w: [K, N] -> [M, N].  Canonical-multiple
+    ``bk`` (the tuner's swept space) is bit-exact vs the blocked jnp
+    reference; other widths remain legal with a short tail slice."""
     M, K = x.shape
     _, N = w.shape
     pm, pk, pn = (-M) % bm, (-K) % bk, (-N) % bn
@@ -55,7 +66,7 @@ def spike_matmul_pallas(x, w, *, bm: int = 128, bk: int = 128,
     k_steps = Kp // bk
 
     y = pl.pallas_call(
-        functools.partial(_kernel, k_steps=k_steps),
+        functools.partial(_kernel, k_steps=k_steps, bk=bk),
         grid=(Mp // bm, Np // bn, k_steps),
         in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
                   pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],

@@ -81,3 +81,29 @@ def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
     bound = max(terms["compute_s"], terms["memory_s"], terms["collective_s"])
     terms["roofline_fraction"] = (terms["compute_s"] / bound) if bound else 0.0
     return terms
+
+
+# Per-grid-step fixed cost of a Pallas kernel launch.  In interpret mode
+# (this container's CPU CI) each grid step is a Python-level kernel-body
+# evaluation, so the fixed cost dwarfs the roofline terms and grid-step
+# COUNT is the first-order wall-clock predictor — exactly why the
+# autotuner's candidate ranking must include it.  On real hardware the
+# per-step cost is the Mosaic dispatch overhead, orders of magnitude
+# smaller.
+INTERPRET_STEP_OVERHEAD_S = 50e-6
+COMPILED_STEP_OVERHEAD_S = 2e-6
+
+
+def kernel_launch_estimate(flops: float, bytes_moved: float,
+                           grid_steps: int, *,
+                           interpret: bool = True) -> float:
+    """Coarse wall-clock estimate (seconds) for one Pallas launch: the
+    roofline compute/memory bound plus a fixed per-grid-step overhead.
+
+    Used by ``repro.kernels.tune`` to RANK candidate launch configs and
+    prune the measured sweep — only relative order matters, so the model
+    is deliberately minimal (no VMEM-pressure or pipelining terms)."""
+    step = (INTERPRET_STEP_OVERHEAD_S if interpret
+            else COMPILED_STEP_OVERHEAD_S)
+    return (max(flops / PEAK_FLOPS, bytes_moved / HBM_BW)
+            + grid_steps * step)

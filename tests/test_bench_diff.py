@@ -42,6 +42,30 @@ def test_selftest_passes():
     assert selftest(tol=1.5, min_us=50.0) == 0
 
 
+def test_normalize_cancels_uniform_host_factor():
+    old = {"a": 1000.0, "b": 400.0, "c": 900.0}
+    slower = {k: v * 3.0 for k, v in old.items()}    # 3x slower machine
+    reg, _, _ = diff(old, slower, tol=1.5, min_us=50.0)
+    assert len(reg) == 3                  # raw mode: everything "regressed"
+    reg, _, cmpd = diff(old, slower, tol=1.5, min_us=50.0, normalize=True)
+    assert not reg                        # normalized: uniform factor gone
+    assert all(abs(r - 1.0) < 1e-9 for *_, r in cmpd)
+    # a genuinely relative regression still fires through the median
+    slower["a"] *= 2.0
+    reg, _, _ = diff(old, slower, tol=1.5, min_us=50.0, normalize=True)
+    assert [r[0] for r in reg] == ["a"]
+
+
+def test_normalize_cli_flag(tmp_path):
+    p_old = tmp_path / "BENCH_base.json"
+    p_new = tmp_path / "BENCH_1.json"
+    rows = {"a": 100.0, "b": 200.0, "c": 300.0}
+    p_old.write_text(json.dumps(_bench(rows)))
+    p_new.write_text(json.dumps(_bench({k: v * 4 for k, v in rows.items()})))
+    assert main([str(p_old), str(p_new)]) == 1
+    assert main([str(p_old), str(p_new), "--normalize"]) == 0
+
+
 def test_cli_exit_codes(tmp_path):
     p_old = tmp_path / "BENCH_0.json"
     p_new = tmp_path / "BENCH_1.json"

@@ -132,11 +132,23 @@ def _tuned_backbone_sweep(emit):
     (REPRO_PALLAS_COMPILE=1 on TPU) is where the <=jnp comparison is
     the roofline-fair one.
 
+    ISSUE 9 adds a FOURTH executable per backbone: the whole-backbone
+    megakernel (``npu_fwd_moving_bar_<name>_fused_backbone``), timed
+    from the same tuned table with the ``backbone_seg`` entries forced
+    ``fused=True`` while the ``_pallas_tuned`` row forces them
+    ``fused=False`` — so xlayer isolates exactly what cross-layer VMEM
+    residency buys over the best per-layer composition.  In interpret
+    mode the win is launch-count collapse: L per-layer kernels x their
+    grid steps become ONE kernel with B grid steps per segment (CI
+    gates xlayer >= 1.5).
+
     Also emits one ``tune_<op>_<shape>`` row per tuned shape (winner
     us vs default-config us, both measured by the sweep on the live
     activations), and persists the table to TUNE_TABLE.json — the CI
     artifact that makes a tuning run reproducible/inspectable.
     """
+    import copy
+
     from repro.configs.registry import get_tune_config
     from repro.kernels import tune
 
@@ -164,14 +176,29 @@ def _tuned_backbone_sweep(emit):
             jax.block_until_ready(f_d(params, vox))   # trace w/ defaults
         with tune.tuning(table, tc):
             npu_forward(params, vox, cfg_p)   # eager: sweeps each shape
-        tune.set_table(table)
+        # per-layer-tuned vs whole-backbone-fused variants of the SAME
+        # swept winners: only the backbone_seg routing flag differs
+        seg_keys = [k for k in table.entries
+                    if k.startswith("backbone_seg|")]
+        t_layer = tune.TuningTable(copy.deepcopy(table.entries))
+        t_fused = tune.TuningTable(copy.deepcopy(table.entries))
+        for k in seg_keys:
+            t_layer.entries[k]["fused"] = False
+            t_fused.entries[k].update(fused=True, gate="inline")
+        tune.set_table(t_layer)
         try:
             f_t = jax.jit(lambda p, v, c=cfg_p: npu_forward(p, v, c))
             jax.block_until_ready(f_t(params, vox))   # trace w/ winners
         finally:
             tune.set_table(None)
+        tune.set_table(t_fused)
+        try:
+            f_f = jax.jit(lambda p, v, c=cfg_p: npu_forward(p, v, c))
+            jax.block_until_ready(f_f(params, vox))   # trace megakernels
+        finally:
+            tune.set_table(None)
         jax.block_until_ready(f_j(params, vox))
-        t_j = t_d = t_t = float("inf")
+        t_j = t_d = t_t = t_f = float("inf")
         for _ in range(reps):
             t0 = time.perf_counter()
             jax.block_until_ready(f_j(params, vox))
@@ -180,14 +207,20 @@ def _tuned_backbone_sweep(emit):
             t2 = time.perf_counter()
             jax.block_until_ready(f_t(params, vox))
             t3 = time.perf_counter()
+            jax.block_until_ready(f_f(params, vox))
+            t4 = time.perf_counter()
             t_j = min(t_j, (t1 - t0) * 1e6)
             t_d = min(t_d, (t2 - t1) * 1e6)
             t_t = min(t_t, (t3 - t2) * 1e6)
+            t_f = min(t_f, (t4 - t3) * 1e6)
         emit(f"npu_fwd_moving_bar_{name}_jnp", t_j, f"sp{sp:.2f}")
         emit(f"npu_fwd_moving_bar_{name}_pallas_default", t_d,
              f"sp{sp:.2f}")
         emit(f"npu_fwd_moving_bar_{name}_pallas_tuned", t_t,
              f"xdef{t_d / t_t:.2f}_xjnp{t_j / t_t:.2f}")
+        emit(f"npu_fwd_moving_bar_{name}_fused_backbone", t_f,
+             f"seg{len(seg_keys)}_xlayer{t_t / t_f:.2f}"
+             f"_xjnp{t_j / t_f:.2f}")
     for key in sorted(table.entries):
         e = table.entries[key]
         emit("tune_" + key.replace("|", "_").replace(",", "_"),
@@ -237,21 +270,23 @@ def _backend_sweep(emit, rng):
 
 def _engine_tick_sweep(emit, rng):
     """Engine submit->result latency (voxel path) per NPU backend: the
-    zero-copy tick — staged numpy slots, one device_put, one fetch."""
-    for backend in ("jnp", "pallas"):
-        cfg = reduced_snn("spiking_yolo", backend=backend)
-        params = init_npu(jax.random.PRNGKey(1), cfg)
-        scene = make_scene_batch(jax.random.PRNGKey(3), batch=4,
-                                 height=cfg.height, width=cfg.width,
-                                 time_steps=cfg.time_steps)
-        vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
-                          height=cfg.height, width=cfg.width)
-        eng = CognitiveEngine(params, cfg, batch=4)
+    zero-copy tick — staged numpy slots, one device_put, one fetch.
 
+    The ISSUE 9 ``engine_tick_pallas_fused`` row serves the SAME
+    requests through an engine constructed under a tuned table whose
+    ``backbone_seg`` entries are forced fused: the tick executable's
+    backbone runs as whole-segment megakernels (the engine pins the
+    table snapshot at construction, so one sweep prices the whole
+    serving run).  Its derived field carries the speedup over the
+    per-layer ``engine_tick_pallas`` row timed in the same process."""
+    from repro.configs.registry import get_tune_config
+    from repro.kernels import tune
+
+    def _time_engine(eng, vox, bayer):
         def _drive():
             for i in range(4):
                 eng.submit(PerceptionRequest(rid=i, voxels=vox[:, i],
-                                             bayer=scene.bayer[i]))
+                                             bayer=bayer[i]))
             return eng.tick()
 
         _drive()                               # warm the tick executable
@@ -260,9 +295,42 @@ def _engine_tick_sweep(emit, rng):
         for _ in range(reps):
             done = _drive()
         jax.block_until_ready(done[-1].result.rgb)
-        t_us = (time.perf_counter() - t0) / reps * 1e6
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    times = {}
+    for backend in ("jnp", "pallas"):
+        cfg = reduced_snn("spiking_yolo", backend=backend)
+        params = init_npu(jax.random.PRNGKey(1), cfg)
+        scene = make_scene_batch(jax.random.PRNGKey(3), batch=4,
+                                 height=cfg.height, width=cfg.width,
+                                 time_steps=cfg.time_steps)
+        vox = voxel_batch(scene.events, time_steps=cfg.time_steps,
+                          height=cfg.height, width=cfg.width)
+        t_us = _time_engine(CognitiveEngine(params, cfg, batch=4),
+                            vox, scene.bayer)
+        times[backend] = t_us
         emit(f"engine_tick_{backend}", t_us,
              f"{4e6 / t_us:.1f}req_s")         # 4 requests per tick
+        if backend != "pallas":
+            continue
+        # fused whole-backbone tick: sweep the batch-4 shapes once,
+        # force the segment entries fused, pin via engine construction
+        tc = (get_tune_config("smoke") if is_smoke()
+              else tune.default_tune_config())
+        table = tune.TuningTable()
+        with tune.tuning(table, tc):
+            npu_forward(params, vox, cfg)
+        for k in table.entries:
+            if k.startswith("backbone_seg|"):
+                table.entries[k].update(fused=True, gate="inline")
+        tune.set_table(table)
+        try:
+            eng_f = CognitiveEngine(params, cfg, batch=4)
+        finally:
+            tune.set_table(None)
+        t_f = _time_engine(eng_f, vox, scene.bayer)
+        emit("engine_tick_pallas_fused", t_f,
+             f"x{times['pallas'] / t_f:.2f}_{4e6 / t_f:.1f}req_s")
 
 
 def run(emit):

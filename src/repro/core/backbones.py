@@ -4,6 +4,21 @@ All take a voxel grid [T, B, H, W, 2] and return features
 [T, B, H/2^stages, W/2^stages, C_out]; an optional ``tape``
 (repro.core.sparsity.SparsityTape) records per-layer spike rates
 inside the same traced forward (npu_forward's ``collect_sparsity``).
+
+Whole-backbone fusion (ISSUE 9): each backbone's linear layer run is
+declared as a tuple of ``repro.kernels.backbone_fuse.LayerSpec`` and
+executed through ``_run_layers`` — under ``backend="pallas"`` (f32, no
+tape) the fusion planner segments the run into maximal VMEM-resident
+segments and each multi-layer (or pool-absorbing) segment dispatches
+through ``repro.kernels.ops.backbone_segment_op``, where the tuned
+config picks the layer-chained megakernel or the per-layer composition.
+Every other case — jnp backend, sparsity tape active (per-layer rates
+must record), non-f32 — runs the identical per-layer sequence the
+backbones always ran, so call sites and numerics are unchanged.
+DenseNet's concat topology keeps its block loop (a concat input is
+multi-consumer — interior activations of a fused segment never leave
+VMEM, so only its LINEAR pieces, the 1x1 transition + pool, route
+through the planner).
 """
 from __future__ import annotations
 
@@ -13,12 +28,54 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import SNNConfig
-from repro.core.layers import (apply_spiking_conv, init_spiking_conv,
-                               max_pool)
+from repro.core.layers import (_check_backend, apply_spiking_conv,
+                               init_spiking_conv, max_pool)
+from repro.kernels.backbone_fuse import LayerSpec
 
 
 def _stage_channels(cfg: SNNConfig) -> List[int]:
     return [cfg.base_channels * (2 ** i) for i in range(cfg.num_stages)]
+
+
+# ---------------------------------------------------------------- executor
+
+def _run_per_layer(p, x, cfg: SNNConfig, specs, tape=None):
+    """The reference per-layer sequence: one ``apply_spiking_conv``
+    (its own backend dispatch) + optional pool per spec."""
+    for s in specs:
+        x = apply_spiking_conv(p[s.name], x, cfg, stride=s.stride,
+                               depthwise=s.depthwise, tape=tape,
+                               tag=s.name)
+        if s.pool:
+            x = max_pool(x, s.pool, cfg=cfg)
+    return x
+
+
+def _run_layers(p, x, cfg: SNNConfig, specs, tape=None):
+    """Execute a linear run of layers, fusing across layer boundaries
+    where the planner allows.  Falls back to the per-layer sequence
+    whenever fusion cannot apply (jnp backend, tape recording, non-f32
+    activations) — those paths are bit-identical to the pre-fusion
+    backbones."""
+    if (not _check_backend(cfg) or tape is not None
+            or x.dtype != jnp.float32):
+        return _run_per_layer(p, x, cfg, specs, tape)
+    from repro.kernels.backbone_fuse import plan_segments
+    from repro.kernels.ops import backbone_segment_op
+    T, B, H, W, _ = x.shape
+    for seg in plan_segments(specs, H=H, W=W, T=T, dtype=x.dtype):
+        if seg.fusible and (len(seg.layers) > 1 or seg.layers[0].pool):
+            params = tuple((p[s.name]["w"], p[s.name]["scale"],
+                            p[s.name]["bias"]) for s in seg.layers)
+            # anonymized specs: the tune key and the jit trace carry
+            # only shape facts, so same-shaped segments share both
+            x = backbone_segment_op(
+                x, params, specs=tuple(s.anon() for s in seg.layers),
+                tau=cfg.tau_mem, v_th=cfg.v_threshold,
+                v_reset=cfg.v_reset, beta=cfg.surrogate_beta)
+        else:
+            x = _run_per_layer(p, x, cfg, seg.layers, tape)
+    return x
 
 
 # --------------------------------------------------------------------- VGG
@@ -34,14 +91,18 @@ def init_vgg(rng, cfg: SNNConfig):
     return params
 
 
+def vgg_specs(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
+    chans = _stage_channels(cfg)
+    specs, cin = [], cfg.in_channels
+    for i, c in enumerate(chans):
+        specs.append(LayerSpec(name=f"s{i}_a", cin=cin, cout=c))
+        specs.append(LayerSpec(name=f"s{i}_b", cin=c, cout=c, pool=2))
+        cin = c
+    return tuple(specs)
+
+
 def apply_vgg(p, x, cfg: SNNConfig, tape=None):
-    for i in range(cfg.num_stages):
-        x = apply_spiking_conv(p[f"s{i}_a"], x, cfg, tape=tape,
-                               tag=f"s{i}_a")
-        x = apply_spiking_conv(p[f"s{i}_b"], x, cfg, tape=tape,
-                               tag=f"s{i}_b")
-        x = max_pool(x)
-    return x
+    return _run_layers(p, x, cfg, vgg_specs(cfg), tape=tape)
 
 
 # ---------------------------------------------------------------- DenseNet
@@ -67,6 +128,8 @@ def init_densenet(rng, cfg: SNNConfig, layers_per_block: int = 3):
 def apply_densenet(p, x, cfg: SNNConfig, layers_per_block: int = 3,
                    tape=None):
     x = apply_spiking_conv(p["stem"], x, cfg, tape=tape, tag="stem")
+    growth = cfg.base_channels
+    cin = growth
     for s in range(cfg.num_stages):
         feats = [x]
         for l in range(layers_per_block):
@@ -74,9 +137,16 @@ def apply_densenet(p, x, cfg: SNNConfig, layers_per_block: int = 3,
             feats.append(apply_spiking_conv(p[f"b{s}_l{l}"], inp, cfg,
                                             tape=tape, tag=f"b{s}_l{l}"))
         x = jnp.concatenate(feats, axis=-1)
-        # 1x1 transition
-        x = apply_spiking_conv(p[f"t{s}"], x, cfg, tape=tape, tag=f"t{s}")
-        x = max_pool(x)
+        cin += layers_per_block * growth
+        # the linear tail of the block — 1x1 transition + pool — is the
+        # densenet piece the fusion planner can take (concat inputs are
+        # multi-consumer and stay per-layer)
+        x = _run_layers(
+            p, x, cfg,
+            (LayerSpec(name=f"t{s}", kernel=1, cin=cin, cout=cin // 2,
+                       pool=2),),
+            tape=tape)
+        cin = cin // 2
     return x
 
 
@@ -96,14 +166,20 @@ def init_mobilenet(rng, cfg: SNNConfig):
     return params
 
 
+def mobilenet_specs(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
+    chans = _stage_channels(cfg)
+    specs = [LayerSpec(name="stem", cin=cfg.in_channels, cout=chans[0])]
+    cin = chans[0]
+    for i, c in enumerate(chans):
+        specs.append(LayerSpec(name=f"dw{i}", stride=2, depthwise=True,
+                               cin=cin, cout=cin))
+        specs.append(LayerSpec(name=f"pw{i}", kernel=1, cin=cin, cout=c))
+        cin = c
+    return tuple(specs)
+
+
 def apply_mobilenet(p, x, cfg: SNNConfig, tape=None):
-    x = apply_spiking_conv(p["stem"], x, cfg, tape=tape, tag="stem")
-    for i in range(cfg.num_stages):
-        x = apply_spiking_conv(p[f"dw{i}"], x, cfg, stride=2,
-                               depthwise=True, tape=tape, tag=f"dw{i}")
-        x = apply_spiking_conv(p[f"pw{i}"], x, cfg, tape=tape,
-                               tag=f"pw{i}")
-    return x
+    return _run_layers(p, x, cfg, mobilenet_specs(cfg), tape=tape)
 
 
 # -------------------------------------------------------------------- YOLO
@@ -121,12 +197,18 @@ def init_yolo_backbone(rng, cfg: SNNConfig):
     return params
 
 
+def yolo_specs(cfg: SNNConfig) -> Tuple[LayerSpec, ...]:
+    chans = _stage_channels(cfg)
+    specs, cin = [], cfg.in_channels
+    for i, c in enumerate(chans):
+        specs.append(LayerSpec(name=f"d{i}", stride=2, cin=cin, cout=c))
+        specs.append(LayerSpec(name=f"f{i}", cin=c, cout=c))
+        cin = c
+    return tuple(specs)
+
+
 def apply_yolo_backbone(p, x, cfg: SNNConfig, tape=None):
-    for i in range(cfg.num_stages):
-        x = apply_spiking_conv(p[f"d{i}"], x, cfg, stride=2, tape=tape,
-                               tag=f"d{i}")
-        x = apply_spiking_conv(p[f"f{i}"], x, cfg, tape=tape, tag=f"f{i}")
-    return x
+    return _run_layers(p, x, cfg, yolo_specs(cfg), tape=tape)
 
 
 BACKBONES = {

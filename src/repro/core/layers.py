@@ -302,10 +302,24 @@ def apply_spiking_dense(p, x, cfg: SNNConfig, *, fire: bool = True,
     return out
 
 
-def max_pool(x, window: int = 2):
-    """x: [T, B, H, W, C] (batch-major fold — see apply_spiking_conv)."""
+def max_pool(x, window: int = 2, cfg: Optional[SNNConfig] = None):
+    """x: [T, B, H, W, C] (batch-major fold — see apply_spiking_conv).
+
+    With a pallas ``cfg`` on a COMPILED backend the reduction routes
+    through the gated Pallas pooling kernel (``repro.kernels.ops.
+    max_pool_op`` — an all-silent frame skips its reduction); under the
+    interpreter a standalone pool launch is a net loss (per-grid-step
+    tax), so reduce_window serves — bit-identical either way (max has
+    no rounding).  Fused backbone segments never reach here: pooling is
+    absorbed as an in-kernel epilogue (repro.kernels.backbone_fuse)."""
     T, B, H, W, C = x.shape
     xf = jnp.swapaxes(x, 0, 1).reshape(B * T, H, W, C)
+    if cfg is not None and _check_backend(cfg):
+        from repro.kernels import ops
+        if not ops.INTERPRET:
+            y = ops.max_pool_op(xf, window=window)
+            return jnp.swapaxes(
+                y.reshape(B, T, H // window, W // window, C), 0, 1)
     y = jax.lax.reduce_window(xf, -jnp.inf, jax.lax.max,
                               (1, window, window, 1),
                               (1, window, window, 1), "VALID")

@@ -23,6 +23,16 @@ the culprit.  Centralising the constants makes that impossible:
   the dispatch layer both run, so an illegal block shape fails loudly
   at config time instead of as a last-bit mismatch in a parity test.
 
+The whole-backbone megakernel (ISSUE 9, ``kernels/backbone_fuse.py``)
+leans on the same contract one level up: every layer of a fused
+segment zero-pads its VMEM-resident patch matrix to canonical
+sub-blocks and accumulates them in canonical order, so a *multi-layer*
+fused forward stays bit-exact against the per-layer composition AND
+the jnp reference — zero padding is exact, and the accumulation
+order per layer is byte-for-byte the one this module pins.  Its
+swept row-chunk sizes (``bm`` ∈ {128, 256, 512}) start from
+``DEFAULT_BM`` below.
+
 This module is import-light on purpose (no jax, no pallas): the
 pure-jnp reference path imports it without pulling the kernel stack in.
 """

@@ -48,8 +48,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.layers import (_same_pads, blocked_matmul, dw_patches,
-                               spike_im2col)
+                               max_pool, spike_conv_jnp, spike_im2col)
+from repro.core.lif import lif_scan as lif_scan_ref
 from repro.kernels import tune
+from repro.kernels.backbone_fuse import (backbone_segment_pallas,
+                                         max_pool_pallas, segment_macs,
+                                         segment_activation_elems,
+                                         segment_unfused_grid_steps)
+from repro.kernels.blocks import CANONICAL_K_BLOCK
 from repro.kernels.demosaic import demosaic_pallas
 from repro.kernels.event_voxel import event_voxel_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -538,6 +544,232 @@ def spike_conv_lif_op(xf, w, scale, bias, *, T: int, B: int,
         xf, w, scale, bias, T=T, B=B, stride=stride, fused=cfg.fused,
         gate=cfg.gate, bm=cfg.bm, bk=cfg.bk, bn=cfg.bn, tau=tau,
         v_th=v_th, v_reset=v_reset, beta=beta)
+
+
+# ---------------------------------------------------------------------------
+# backbone_segment_op: a whole planned backbone segment through one
+# dispatch point — the layer-chained megakernel (spikes stay VMEM-
+# resident across layer boundaries) or the per-layer composition, per
+# tuned config (ISSUE 9)
+# ---------------------------------------------------------------------------
+
+def _seg_prep(params, specs):
+    """Flatten per-layer (w, scale, bias) into the megakernel's
+    operands: normal layers pass the canonical-padded [Kp, N] weight
+    matrix (trailing-zero K rows — the bit-preserving padding PR 8
+    established), depthwise layers the [taps, C] tap matrix."""
+    flat = []
+    for (w, scale, bias), s in zip(params, specs):
+        if s.depthwise:
+            flat.append(w.reshape(s.kernel * s.kernel, -1))
+        else:
+            wmat = w.reshape(s.kernel * s.kernel * w.shape[2], w.shape[3])
+            pk = (-wmat.shape[0]) % CANONICAL_K_BLOCK
+            if pk:
+                wmat = jnp.pad(wmat, ((0, pk), (0, 0)))
+            flat.append(wmat)
+        flat += [scale, bias]
+    return tuple(flat)
+
+
+def _segment_ref(x, params, specs, *, tau, v_th, v_reset, beta):
+    """Bit-exact jnp reference of a fused segment: per layer, the
+    canonical K-blocked ``spike_conv_jnp``, the axis-(0, 2) instance
+    norm + affine, the ``repro.core.lif.lif_scan`` recurrence (whose
+    ``spike`` carries the sigmoid-surrogate custom VJP), then the
+    reduce_window max-pool — exactly the jnp backend's layer
+    composition.  Doubles as the megakernel's backward: ``jax.vjp``
+    through THIS composition is the surrogate-gradient BPTT, so the
+    custom VJP below rematerialises the whole segment (one recompute
+    instead of L·3 HBM spills from the forward kernel) and replays the
+    scan."""
+    cur = x
+    for (w, scale, bias), s in zip(params, specs):
+        T, B, h, wdim, c = cur.shape
+        xf = jnp.swapaxes(cur, 0, 1).reshape(B * T, h, wdim, c)
+        y = spike_conv_jnp(xf, w, stride=s.stride, depthwise=s.depthwise)
+        _, ho, wo, co = y.shape
+        y5 = jnp.swapaxes(y.reshape(B, T, ho, wo, co), 0, 1)
+        y4 = y5.reshape(T, B, ho * wo, co)
+        mu = jnp.mean(y4, axis=(0, 2), keepdims=True)
+        var = jnp.var(y4, axis=(0, 2), keepdims=True)
+        z = ((y4 - mu) * jax.lax.rsqrt(var + NORM_EPS)).reshape(y5.shape)
+        z = z * scale + bias
+        cur = lif_scan_ref(z, tau=tau, v_th=v_th, v_reset=v_reset,
+                           beta=beta)
+        if s.pool:
+            cur = max_pool(cur, s.pool)
+    return cur
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def _backbone_seg(x, params, specs, gate, bm, tau, v_th, v_reset, beta):
+    return backbone_segment_pallas(
+        x, _seg_prep(params, specs), specs=specs, tau=tau, v_th=v_th,
+        v_reset=v_reset, eps=NORM_EPS, gate=gate, bm=bm,
+        interpret=INTERPRET)
+
+
+def _backbone_seg_fwd(x, params, specs, gate, bm, tau, v_th, v_reset,
+                      beta):
+    out = _backbone_seg(x, params, specs, gate, bm, tau, v_th, v_reset,
+                        beta)
+    return out, (x, params)
+
+
+def _backbone_seg_bwd(specs, gate, bm, tau, v_th, v_reset, beta, res, g):
+    x, params = res
+    # rematerialise per segment, replay the scan: differentiate the
+    # bit-exact jnp composition of the SAME segment (surrogate spike,
+    # canonical K blocks), so fused-path grads match the per-layer
+    # path to float rounding
+    _, vjp = jax.vjp(
+        lambda xx, pp: _segment_ref(xx, pp, specs, tau=tau, v_th=v_th,
+                                    v_reset=v_reset, beta=beta),
+        x, params)
+    return vjp(g)
+
+
+_backbone_seg.defvjp(_backbone_seg_fwd, _backbone_seg_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "specs", "gate", "bm", "tau", "v_th", "v_reset", "beta"))
+def _backbone_seg_jit(x, params, *, specs, gate, bm, tau, v_th, v_reset,
+                      beta):
+    return _backbone_seg(x, params, specs, gate, bm, tau, v_th, v_reset,
+                         beta)
+
+
+def _pool_spikes(x, window: int):
+    """Max-pool spikes [T, B, H, W, C] on the unfused pallas path:
+    kernel-backed when compiled, reduce_window under the interpreter
+    (bit-identical; a standalone interpret-mode launch is a net loss —
+    fused segments absorb pooling as an in-kernel epilogue instead)."""
+    if INTERPRET:
+        return max_pool(x, window)
+    T, B, H, W, C = x.shape
+    xf = jnp.swapaxes(x, 0, 1).reshape(B * T, H, W, C)
+    y = max_pool_op(xf, window=window)
+    return jnp.swapaxes(
+        y.reshape(B, T, H // window, W // window, C), 0, 1)
+
+
+def _seg_unfused(x, params, specs, *, tau, v_th, v_reset, beta):
+    """The per-layer kernel composition of a segment (each layer its own
+    tuned dispatch, one HBM round-trip per layer) — the default path and
+    the ``fused=False`` tuning candidate.  Deliberately PLAIN EAGER
+    Python (the inner ops carry their own jits): during a measured
+    sweep this candidate's nested conv_lif dispatches stay eager, so
+    untuned per-layer shapes run their own sweeps and record their own
+    table entries instead of degrading to resolution-only."""
+    cur = x
+    for (w, scale, bias), s in zip(params, specs):
+        T, B, h, wdim, c = cur.shape
+        xf = jnp.swapaxes(cur, 0, 1).reshape(B * T, h, wdim, c)
+        if s.depthwise:
+            y = spike_conv_op(xf, w, stride=s.stride, depthwise=True)
+            _, ho, wo, co = y.shape
+            y = jnp.swapaxes(y.reshape(B, T, ho, wo, co), 0, 1)
+            cur = norm_affine_lif_op(y, scale, bias, tau=tau, v_th=v_th,
+                                     v_reset=v_reset, beta=beta)
+        else:
+            cur = spike_conv_lif_op(xf, w, scale, bias, T=T, B=B,
+                                    stride=s.stride, tau=tau, v_th=v_th,
+                                    v_reset=v_reset, beta=beta)
+        if s.pool:
+            cur = _pool_spikes(cur, s.pool)
+    return cur
+
+
+def backbone_segment_op(x, params, *, specs, tau: float = 2.0,
+                        v_th: float = 1.0, v_reset: float = 0.0,
+                        beta: float = 4.0):
+    """One planned backbone segment (``repro.kernels.backbone_fuse.
+    plan_segments``) through one dispatch point.  x: [T, B, H, W, C]
+    spikes; params: tuple of (w, scale, bias) per layer; specs: the
+    segment's ``LayerSpec`` tuple (anonymized — shape keys carry only
+    shape facts, so same-shaped segments share one table entry and one
+    executable) -> spikes after the segment's last layer, pooling
+    absorbed.
+
+    The tuned config decides the SEGMENT'S fusion boundary per shape:
+    the layer-chained megakernel (``backbone_segment_pallas`` — spikes
+    and membranes VMEM-resident across layer boundaries, ONE launch) or
+    the per-layer composition (``_seg_unfused`` — each layer's own
+    tuned conv→LIF dispatch).  Default is per-layer: whole-backbone
+    fusion must WIN a measured sweep to be served, so an untuned
+    deployment behaves exactly like PR 8.  Both variants are bit-exact
+    vs the jnp reference; the custom VJP rematerialises the segment and
+    replays the scan, so the fused path is training-legal."""
+    T, B, H, W, _ = x.shape
+    dims = dict(T=T, B=B, H=H, W=W)
+    for i, s in enumerate(specs):
+        dims[f"L{i}"] = s.dim_token
+    # aggregate roofline terms for the tuner's candidate ranking: total
+    # MACs, total per-layer activation traffic, and the grid steps the
+    # per-layer path would pay (the interpret-mode wall-clock term)
+    dims["F"] = segment_macs(specs, H=H, W=W, T=T, B=B)
+    dims["A"] = segment_activation_elems(specs, H=H, W=W, T=T, B=B)
+    dims["G"] = segment_unfused_grid_steps(specs, H=H, W=W, T=T, B=B)
+    runner = None
+    live = 1.0
+    if tune.tuning_active() and tune.concrete(x):
+        live = _live_fraction(x)
+
+        def runner(c):
+            if c.fused:
+                return _backbone_seg_jit(
+                    x, params, specs=specs, gate=c.gate, bm=c.bm,
+                    tau=tau, v_th=v_th, v_reset=v_reset, beta=beta)
+            return _seg_unfused(x, params, specs, tau=tau, v_th=v_th,
+                                v_reset=v_reset, beta=beta)
+    cfg = tune.dispatch("backbone_seg", dims, runner, live=live)
+    if cfg.fused:
+        return _backbone_seg_jit(x, params, specs=specs, gate=cfg.gate,
+                                 bm=cfg.bm, tau=tau, v_th=v_th,
+                                 v_reset=v_reset, beta=beta)
+    return _seg_unfused(x, params, specs, tau=tau, v_th=v_th,
+                        v_reset=v_reset, beta=beta)
+
+
+# ---------------------------------------------------------------------------
+# max_pool_op: gated Pallas spike pooling (the unfused compiled path)
+# ---------------------------------------------------------------------------
+
+def _pool_ref(xf, window: int):
+    return jax.lax.reduce_window(xf, -jnp.inf, jax.lax.max,
+                                 (1, window, window, 1),
+                                 (1, window, window, 1), "VALID")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _max_pool_k(xf, window, gated):
+    return max_pool_pallas(xf, window=window, gated=gated,
+                           interpret=INTERPRET)
+
+
+def _max_pool_k_fwd(xf, window, gated):
+    return _max_pool_k(xf, window, gated), xf
+
+
+def _max_pool_k_bwd(window, gated, xf, g):
+    _, vjp = jax.vjp(lambda v: _pool_ref(v, window), xf)
+    return vjp(g)
+
+
+_max_pool_k.defvjp(_max_pool_k_fwd, _max_pool_k_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "gated"))
+def max_pool_op(xf, *, window: int = 2, gated: bool = True):
+    """Gated Pallas max-pool of a folded [N, H, W, C] SPIKE tensor —
+    an all-silent frame skips its reduction and writes zeros (exact
+    only because spikes are non-negative).  Bit-exact vs reduce_window
+    (max has no rounding); differentiable via the reduce_window
+    adjoint.  Serves the unfused pallas path on compiled backends;
+    fused backbone segments absorb pooling in-kernel instead."""
+    return _max_pool_k(xf, window, gated)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "depthwise"))

@@ -63,7 +63,9 @@ from repro.launch.roofline import kernel_launch_estimate
 TUNE_SCHEMA_VERSION = 1
 # Version of the kernels the measurements are valid for — bump whenever
 # kernel numerics or launch semantics change (e.g. CANONICAL_K_BLOCK).
-KERNELS_VERSION = 1
+# v2: whole-backbone fused segments (ISSUE 9) — new "backbone_seg" op
+# keys; stale v1 tables are wholesale-invalidated.
+KERNELS_VERSION = 2
 
 # The packaged default table (committed, produced by the bench sweep).
 DEFAULT_TABLE_PATH = os.path.join(os.path.dirname(__file__),
@@ -90,6 +92,9 @@ _OP_DEFAULTS: Dict[str, LaunchConfig] = {
     "spike_matmul": LaunchConfig(gate="inline"),
     "lif_scan": LaunchConfig(bn=DEFAULT_LIF_BLOCK_N, gate="none"),
     "conv_lif": LaunchConfig(fused=False),
+    # whole-backbone segments likewise default to the per-layer
+    # composition — an untuned deployment behaves exactly like PR 8
+    "backbone_seg": LaunchConfig(fused=False),
 }
 
 
@@ -231,6 +236,32 @@ def off():
         _bump_epoch()
 
 
+@contextlib.contextmanager
+def pinned(table: Optional[TuningTable]):
+    """Resolve through a SNAPSHOT table for the duration of the block
+    (``None`` pins the env/packaged chain as it stands — a no-op).
+
+    This is the engine's trace-time hoist (ISSUE 9 satellite): the
+    engine captures ``active_table()`` once at construction and wraps
+    its jit'd tick body in ``pinned(snapshot)``, so every op dispatch
+    inside the tick resolves against the table the engine was BUILT
+    with — once, at trace time — instead of re-reading module state on
+    each tick.  A later ``set_table`` swap cannot silently half-apply
+    to an engine whose executable is already traced."""
+    if table is None:
+        yield
+        return
+    global _explicit, _tune_ctx
+    prev, prev_ctx = _explicit, _tune_ctx
+    _explicit, _tune_ctx = table, None
+    _bump_epoch()
+    try:
+        yield
+    finally:
+        _explicit, _tune_ctx = prev, prev_ctx
+        _bump_epoch()
+
+
 def default_tune_config() -> TuneConfig:
     from repro.configs.registry import TUNE_CONFIGS
     name = ("smoke" if os.environ.get("REPRO_TUNE_SMOKE", "0") == "1"
@@ -314,6 +345,15 @@ def candidates(op: str, dims: Dict[str, int],
         # its nested spike_conv dispatch; gate rides through)
         for gate in _CONV_GATES:
             out.append(LaunchConfig(gate=gate, fused=False))
+    elif op == "backbone_seg":
+        # fused variants: one megakernel per segment, bm the row-chunk
+        # of every layer's per-batch MAC loop; "mask" does not apply
+        # (interior patch matrices never exist outside the kernel)
+        for gate in ("inline", "none"):
+            for bm in (128, 256, 512):
+                out.append(LaunchConfig(bm=bm, gate=gate, fused=True))
+        # the per-layer composition (each layer's own tuned dispatch)
+        out.append(LaunchConfig(fused=False))
     elif op == "spike_dwconv":
         for gate in ("mask", "none"):
             for bm in (128, 256, 512):
@@ -340,6 +380,11 @@ def _grid_steps(op: str, dims: Dict[str, int], cfg: LaunchConfig) -> int:
         # per-op: conv matmul grid + the norm+LIF kernel's batch grid
         return (cdiv(M, cfg.bm) * cdiv(dims["N"], cfg.bn)
                 * cdiv(dims["K"], cfg.bk)) + dims["B"]
+    if op == "backbone_seg":
+        # fused: ONE launch, one program per batch element; unfused:
+        # the per-layer composition's precomputed grid-step total
+        # (dims["G"] — see ops.backbone_segment_op)
+        return dims["B"] if cfg.fused else dims["G"]
     if op == "spike_dwconv":
         return cdiv(dims["M"], cfg.bm)
     if op == "lif_scan":
@@ -372,6 +417,15 @@ def estimate(op: str, dims: Dict[str, int], cfg: LaunchConfig,
         flops = 2.0 * M * K * N * frac
         rt = 1 if cfg.fused else 3   # HBM round-trips of the conv out
         bytes_moved = 4.0 * (M * K * frac + K * N + rt * M * N)
+    elif op == "backbone_seg":
+        # aggregate segment terms precomputed by the dispatcher: F total
+        # MACs, A total per-layer activation elements.  The fused path
+        # keeps interior activations VMEM-resident (they cross HBM
+        # once, at the segment edge); the per-layer path round-trips
+        # each layer's conv output ~3x (conv out, norm in, spikes out)
+        flops = 2.0 * dims["F"] * frac
+        rt = 1 if cfg.fused else 3
+        bytes_moved = 4.0 * dims["A"] * rt
     elif op == "spike_dwconv":
         M, taps, C = dims["M"], dims["taps"], dims["C"]
         flops = 2.0 * M * taps * C * frac

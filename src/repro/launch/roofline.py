@@ -93,6 +93,23 @@ def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
 INTERPRET_STEP_OVERHEAD_S = 50e-6
 COMPILED_STEP_OVERHEAD_S = 2e-6
 
+# Per-core VMEM capacity (TPU v5e: 128 MB/chip across cores; we budget a
+# conservative 16 MB per kernel program so double-buffered pipelining and
+# the compiler's own spills still fit).  The backbone fusion planner
+# (``repro.kernels.backbone_fuse.plan_segments``) forces a segment
+# boundary when a fused run's per-batch working set would exceed this.
+VMEM_BYTES = 16 * 2 ** 20
+F32_BYTES = 4
+
+
+def vmem_residency_estimate(*elem_counts: int) -> int:
+    """Bytes of VMEM a kernel program holds resident, given the f32
+    element counts of its live buffers (inputs, patch matrices,
+    accumulators, scratch).  Deliberately coarse — everything counted
+    at f32 width, no alignment padding — because the planner only needs
+    a monotone budget signal, not an allocator."""
+    return F32_BYTES * sum(int(n) for n in elem_counts)
+
 
 def kernel_launch_estimate(flops: float, bytes_moved: float,
                            grid_steps: int, *,

@@ -41,6 +41,7 @@ from repro.isp.pipeline import (control_vector_pipeline,
                                 legacy_control_permutation)
 from repro.isp.stages import BACKENDS as ISP_BACKENDS
 from repro.isp.stages import control_to_stage_params
+from repro.kernels import tune
 
 
 class EngineCore:
@@ -116,6 +117,15 @@ class EngineCore:
         icfg, ncfg, ecfg, nd = self.isp_cfg, cfg, self.enc_cfg, need
         collect = bool(collect_sparsity)
 
+        # Tune-table hoist (ISSUE 9 satellite): snapshot the active
+        # table ONCE at construction.  The tick body below resolves
+        # every kernel launch config through this snapshot (the
+        # ``tune.pinned`` wrapper runs at trace time only), so the
+        # per-tick path never re-reads module state / re-stats table
+        # files, and a mid-serving ``set_table`` swap cannot half-apply
+        # to an engine whose executable is already traced.
+        self._tune_table = tune.active_table()
+
         def _encode(events):
             if ecfg.backend == "pallas":
                 from repro.kernels.ops import event_voxel_op
@@ -131,22 +141,27 @@ class EngineCore:
             return jnp.moveaxis(vox, 0, 1)            # -> [T, B, H, W, 2]
 
         def _step(params, voxels, bayer, events, from_events):
-            # encode stage: voxelize the event slots inside the same
-            # executable (slots submitted as voxels keep their buffer);
-            # traced out entirely for non-DVS channel layouts
-            if ncfg.in_channels == 2:
-                enc = _encode(events)
-                voxels = jnp.where(from_events[None, :, None, None, None],
-                                   enc, voxels)
-            out = npu_forward(params, voxels, ncfg,
-                              collect_sparsity=collect)
-            ctrl = out.control[:, perm] if perm is not None \
-                else out.control[:, :nd]
-            rgb = jax.vmap(
-                lambda r, c: control_vector_pipeline(r, c, icfg))(bayer, ctrl)
-            sp = jax.vmap(
-                lambda c: control_to_stage_params(c, icfg.stages))(ctrl)
-            return out, rgb, sp
+            # body runs at TRACE time only; ``pinned`` makes every op
+            # dispatch inside resolve against the construction-time
+            # table snapshot (zero per-tick resolution cost)
+            with tune.pinned(self._tune_table):
+                # encode stage: voxelize the event slots inside the same
+                # executable (slots submitted as voxels keep their
+                # buffer); traced out entirely for non-DVS layouts
+                if ncfg.in_channels == 2:
+                    enc = _encode(events)
+                    voxels = jnp.where(
+                        from_events[None, :, None, None, None], enc, voxels)
+                out = npu_forward(params, voxels, ncfg,
+                                  collect_sparsity=collect)
+                ctrl = out.control[:, perm] if perm is not None \
+                    else out.control[:, :nd]
+                rgb = jax.vmap(
+                    lambda r, c: control_vector_pipeline(r, c, icfg))(
+                        bayer, ctrl)
+                sp = jax.vmap(
+                    lambda c: control_to_stage_params(c, icfg.stages))(ctrl)
+                return out, rgb, sp
 
         # one executable serves every tick / control setting / ingestion
         # mix / mesh extent (the FPGA runtime-reconfigurability

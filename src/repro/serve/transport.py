@@ -51,6 +51,12 @@ class StagingBank:
             p=np.zeros((batch, event_capacity), np.int32),
             valid=np.zeros((batch, event_capacity), bool))
         self.from_events = np.zeros((batch,), bool)
+        # the slot pytree is built ONCE: staging mutates the arrays in
+        # place, so the donated upload tuple never needs rebuilding on
+        # the per-tick path (ISSUE 9 satellite — engine_tick staging
+        # overhead)
+        self._tuple = (self.voxels, self.bayer, self.events,
+                       self.from_events)
 
     def stage_voxels(self, slot: int, voxels, bayer) -> None:
         self.voxels[:, slot] = np.asarray(voxels, np.float32)
@@ -69,8 +75,10 @@ class StagingBank:
         self.from_events[slot] = True
 
     def as_tuple(self):
-        """The slot pytree in ``EngineCore.upload`` argument order."""
-        return (self.voxels, self.bayer, self.events, self.from_events)
+        """The slot pytree in ``EngineCore.upload`` argument order —
+        the SAME tuple object every call (slots mutate in place), so
+        per-tick staging is zero-allocation on the host side."""
+        return self._tuple
 
 
 class DoubleBuffer:

@@ -354,6 +354,78 @@ def test_engine_with_fused_isp_backend_matches_jnp(setup):
         CognitiveEngine(params, cfg, ISPConfig(backend="no_such"))
 
 
+# ---------------------------------------------------------------------------
+# Per-tick staging / tune-resolution overhead (ISSUE 9 satellite)
+# ---------------------------------------------------------------------------
+
+def test_staging_bank_tuple_is_prebuilt(setup):
+    """``as_tuple()`` returns the SAME tuple object every call (slots
+    mutate in place) — the donated upload pytree is never rebuilt on
+    the per-tick path."""
+    cfg, params = setup
+    eng = CognitiveEngine(params, cfg, batch=2)
+    t0 = eng.staging.as_tuple()
+    assert eng.staging.as_tuple() is t0
+    assert eng.submit(_requests(cfg, 1, seed=17)[0])
+    t1 = eng.staging.as_tuple()            # staging mutated in place
+    assert t1 is t0 and t1[0] is eng.staging.voxels
+    assert bool(np.any(t1[0]))
+
+
+def test_engine_pallas_tick_pinned_table_no_retrace(setup):
+    """The engine snapshots the active tune table ONCE at construction
+    and the tick body resolves against that snapshot: a tuned pallas
+    engine (fused whole-backbone segments) serves every tick from ONE
+    executable, a mid-serving ``set_table`` swap neither retraces nor
+    changes results, and the output stays bit-equal to the jnp
+    engine."""
+    import dataclasses
+    from repro.configs.base import TuneConfig
+    from repro.core.npu import npu_forward
+    from repro.kernels import tune
+    from repro.kernels.tune import TuningTable
+
+    cfg, params = setup
+    cfg_p = dataclasses.replace(cfg, backend="pallas")
+    reqs = _requests(cfg, 4, seed=19)
+    vox = jnp.stack([r.voxels for r in reqs[:2]], axis=1)
+
+    table = TuningTable()
+    smoke = TuneConfig(name="test", reps=1, prune_to=2, max_candidates=64)
+    with tune.tuning(table, smoke):
+        npu_forward(params, vox, cfg_p)
+    seg_keys = [k for k in table.entries if k.startswith("backbone_seg|")]
+    assert seg_keys                        # the sweep saw fused segments
+    for k in seg_keys:
+        table.entries[k].update(fused=True, gate="inline", bm=128)
+
+    eng_j = CognitiveEngine(params, cfg, batch=2)
+    done_j = sorted(eng_j.run_to_completion(_requests(cfg, 4, seed=19)),
+                    key=lambda r: r.rid)
+
+    tune.set_table(table)
+    try:
+        eng_p = CognitiveEngine(params, cfg_p, batch=2)
+        assert eng_p.core._tune_table is table   # hoisted at construction
+        assert eng_p.submit(reqs[0]) and eng_p.submit(reqs[1])
+        first = eng_p.tick()
+        # mid-serving swap: the traced executable keeps serving the
+        # construction-time snapshot — no retrace, no numeric change
+        tune.set_table(None)
+        assert eng_p.submit(reqs[2]) and eng_p.submit(reqs[3])
+        second = eng_p.tick()
+    finally:
+        tune.set_table(None)
+    assert eng_p._step._cache_size() == 1  # zero retraces across ticks
+    done_p = sorted(first + second, key=lambda r: r.rid)
+    assert [r.rid for r in done_p] == [r.rid for r in done_j]
+    for a, b in zip(done_p, done_j):
+        np.testing.assert_array_equal(np.asarray(a.result.rgb),
+                                      np.asarray(b.result.rgb))
+        np.testing.assert_array_equal(np.asarray(a.result.control),
+                                      np.asarray(b.result.control))
+
+
 def test_cognitive_step_shim_still_works(setup):
     cfg, params = setup
     scene = make_scene_batch(jax.random.PRNGKey(9), batch=2,

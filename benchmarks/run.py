@@ -101,10 +101,11 @@ def main(argv=None) -> None:
                      "derived": str(derived)})
 
     from benchmarks import backbones, isp_bench, kernel_bench, npu_bench, \
-        roofline_bench, serve_bench, train_bench
+        roofline_bench, serve_bench, soak_bench, train_bench
     modules = {"isp": isp_bench, "npu": npu_bench, "kernel": kernel_bench,
                "backbones": backbones, "roofline": roofline_bench,
-               "serve": serve_bench, "train": train_bench}
+               "serve": serve_bench, "soak": soak_bench,
+               "train": train_bench}
     if only is not None:
         unknown = only - set(modules)
         if unknown:
@@ -114,7 +115,7 @@ def main(argv=None) -> None:
             only.discard("serve")   # npu hosts the serving sweep; running
                                     # both would emit duplicate rows
         for name in ("isp", "npu", "kernel", "backbones", "roofline",
-                     "serve", "train"):
+                     "serve", "soak", "train"):
             if name in only:
                 modules[name].run(emit)
     else:
@@ -124,6 +125,7 @@ def main(argv=None) -> None:
         backbones.run(emit)
         roofline_bench.run(emit)
         train_bench.run(emit)
+        soak_bench.run(emit)
 
     doc = {"schema": BENCH_SCHEMA_VERSION, "created_unix": time.time(),
            "smoke": smoke, "rows": rows}

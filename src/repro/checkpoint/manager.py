@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import hashlib
 import json
+import logging
 import os
 import shutil
 import threading
@@ -22,6 +23,10 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import numpy as np
+
+log = logging.getLogger(__name__)
+
+_CHECKSUM_FILE = "CHECKSUM"
 
 
 def _tree_paths(tree) -> List[str]:
@@ -83,8 +88,16 @@ class CheckpointManager:
                 "dtype": logical_dtype,
                 "sha1": hashlib.sha1(arr.tobytes()).hexdigest(),
             })
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+        manifest_bytes = json.dumps(manifest).encode()
+        with open(os.path.join(tmp, "manifest.json"), "wb") as f:
+            f.write(manifest_bytes)
+        # whole-checkpoint content checksum: sha1 over the manifest,
+        # which itself carries every leaf's sha1 — so verifying the
+        # manifest against CHECKSUM + every leaf against the manifest
+        # covers the full contents (a truncated leaf file, a torn
+        # manifest, and bit rot all surface as "corruption")
+        with open(os.path.join(tmp, _CHECKSUM_FILE), "w") as f:
+            f.write(hashlib.sha1(manifest_bytes).hexdigest())
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)               # atomic publish
@@ -118,29 +131,91 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: Optional[int] = None, like: Any = None,
-                shardings: Any = None, verify: bool = True) -> Any:
-        """Load a checkpoint. ``like`` provides the pytree structure;
-        ``shardings`` (optional pytree of NamedSharding) re-shards onto
-        the *current* mesh — which may differ from the save-time mesh
-        (elastic restart)."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError("no checkpoint found")
+    def _read_step(self, step: int, verify: bool):
+        """Load + integrity-check ONE checkpoint directory.  Every
+        corruption mode — torn manifest, CHECKSUM mismatch, truncated
+        or unreadable leaf file, leaf-hash mismatch — surfaces as
+        ``IOError("checkpoint corruption ...")``."""
         d = os.path.join(self.dir, f"step_{step:09d}")
-        manifest = json.load(open(os.path.join(d, "manifest.json")))
+        try:
+            with open(os.path.join(d, "manifest.json"), "rb") as f:
+                manifest_bytes = f.read()
+            manifest = json.loads(manifest_bytes)
+        except (OSError, ValueError) as e:
+            raise IOError(f"checkpoint corruption at step {step}: "
+                          f"unreadable manifest ({e})") from e
+        if verify:
+            cs_path = os.path.join(d, _CHECKSUM_FILE)
+            if os.path.exists(cs_path):     # absent on pre-checksum saves
+                with open(cs_path) as f:
+                    want = f.read().strip()
+                got = hashlib.sha1(manifest_bytes).hexdigest()
+                if got != want:
+                    raise IOError(f"checkpoint corruption at step "
+                                  f"{step}: manifest checksum mismatch")
         leaves = []
         for rec in manifest["leaves"]:
-            arr = np.load(os.path.join(d, rec["file"]))
+            try:
+                arr = np.load(os.path.join(d, rec["file"]))
+            except (OSError, ValueError, EOFError) as e:
+                # np.load raises ValueError on a truncated/garbled .npy
+                raise IOError(f"checkpoint corruption at {rec['path']}: "
+                              f"unreadable leaf file ({e})") from e
             if str(arr.dtype) != rec["dtype"]:
                 import ml_dtypes
                 arr = arr.view(np.dtype(getattr(ml_dtypes, rec["dtype"])))
             if verify:
+                if list(arr.shape) != list(rec["shape"]):
+                    raise IOError(f"checkpoint corruption at "
+                                  f"{rec['path']}: shape mismatch")
                 got = hashlib.sha1(arr.tobytes()).hexdigest()
                 if got != rec["sha1"]:
                     raise IOError(
                         f"checkpoint corruption at {rec['path']}")
             leaves.append(arr)
+        return manifest, leaves
+
+    def restore(self, step: Optional[int] = None, like: Any = None,
+                shardings: Any = None, verify: bool = True) -> Any:
+        """Load a checkpoint. ``like`` provides the pytree structure;
+        ``shardings`` (optional pytree of NamedSharding) re-shards onto
+        the *current* mesh — which may differ from the save-time mesh
+        (elastic restart).
+
+        With ``step=None`` (restore-the-latest), a corrupt newest
+        checkpoint FALLS BACK to the newest intact one (with a warning)
+        — a torn write discovered at restart time costs one checkpoint
+        interval, not the run.  The corruption IOError is raised only
+        when no intact checkpoint remains, or when an explicit ``step``
+        was requested (the caller asked for THAT state; silently
+        substituting another would be worse than failing)."""
+        if step is not None:
+            manifest, leaves = self._read_step(step, verify)
+        else:
+            steps = self.all_steps()
+            if not steps:
+                raise FileNotFoundError("no checkpoint found")
+            manifest = leaves = None
+            last_err: Optional[IOError] = None
+            for s in reversed(steps):
+                try:
+                    manifest, leaves = self._read_step(s, verify)
+                except IOError as e:
+                    log.warning("checkpoint step %d failed integrity "
+                                "check (%s); falling back to the "
+                                "previous one", s, e)
+                    last_err = e
+                    continue
+                if s != steps[-1]:
+                    log.warning(
+                        "restored step %d instead of the newest step "
+                        "%d: %d corrupt checkpoint(s) skipped",
+                        s, steps[-1], len([x for x in steps if x > s]))
+                break
+            if leaves is None:
+                raise IOError(
+                    f"no intact checkpoint in {self.dir}: newest "
+                    f"failure: {last_err}") from last_err
         if like is None:
             return manifest, leaves
         treedef = jax.tree_util.tree_structure(like)

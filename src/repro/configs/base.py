@@ -273,6 +273,85 @@ class FleetConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class FaultConfig:
+    """One deterministic fault-injection schedule (repro.serve.faults).
+
+    ``FaultPlan.from_config`` expands this into an explicit per-(tick,
+    slot) event list with ``numpy.random.default_rng(seed)`` — the SAME
+    config always yields the SAME schedule, so every chaos run (tests,
+    the soak bench, the CI chaos-smoke lane) is replayable from one
+    integer.  Probabilities are per dispatched tick; slot-targeted
+    kinds (input corruption, NaN outputs) draw their slot uniformly.
+
+    Fault kinds (injected at the ``EngineCore``/``StagingBank``
+    boundary, so the ``FleetEngine`` under test is the real code):
+
+    * ``p_corrupt_input``  — NaN poison memcpy'd into a staged voxel
+      slot just before upload (a DMA/SEU analogue);
+    * ``p_nan_output``     — NaN/Inf forced into one slot of the
+      fetched NPU outputs (a kernel-corruption analogue);
+    * ``p_transient``      — the tick raises ``TransientTickError`` at
+      harvest (a device-side launch/compute failure);
+    * ``p_stall``          — the tick's harvest stalls ``stall_ms``
+      past its dispatch (a hung-accelerator analogue);
+    * ``p_malformed``      — the client edge submits a structurally
+      invalid request that tick (shape garbage, missing payloads).
+    """
+    name: str = "chaos"
+    seed: int = 0
+    p_corrupt_input: float = 0.0
+    p_nan_output: float = 0.0
+    p_transient: float = 0.0
+    p_stall: float = 0.0
+    p_malformed: float = 0.0
+    stall_ms: float = 50.0
+    inf_fraction: float = 0.25      # poison with +inf instead of NaN
+
+
+@dataclasses.dataclass(frozen=True)
+class SupervisorConfig:
+    """Self-healing policy for the fleet (repro.serve.supervisor).
+
+    Health checks: every delivered slot passes a NaN/Inf guard
+    (``nan_guard``) — a non-finite result is QUARANTINED (request
+    FAILED, never delivered as garbage); a tick whose dispatch->harvest
+    wall time exceeds ``tick_deadline_ms`` counts as a stall; tick wall
+    times also feed a :class:`HeartbeatMonitor` whose straggler
+    detector (``straggler_factor`` x running median for
+    ``straggler_patience`` consecutive ticks) flags a silently slowing
+    engine.
+
+    Circuit breaker: ``breaker_threshold`` CONSECUTIVE failed ticks
+    open the breaker and demote the engine one rung down the pre-built
+    fallback ladder (fused-pallas -> per-layer pallas -> jnp).  After
+    ``half_open_after`` degraded ticks the next tick probes the rung
+    above (half-open); ``recovery_threshold`` consecutive clean probes
+    promote back up, one failed probe re-opens.
+
+    Client-facing resilience: transiently FAILED requests (transient
+    tick errors, quarantined outputs) are retried up to ``max_retries``
+    times with exponential backoff (``retry_backoff_ms * 2^attempt``)
+    plus deterministic seeded jitter; a request in flight past
+    ``hedge_after_ms`` gets ONE hedged duplicate enqueued — first
+    delivery wins, the loser is discarded."""
+    name: str = "supervisor"
+    nan_guard: bool = True
+    tick_deadline_ms: Optional[float] = None
+    breaker_threshold: int = 3
+    half_open_after: int = 8
+    recovery_threshold: int = 2
+    heartbeat_timeout_s: float = 60.0
+    straggler_factor: float = 6.0
+    straggler_patience: int = 4
+    max_retries: int = 2
+    retry_backoff_ms: float = 4.0
+    retry_jitter_ms: float = 1.0
+    retry_seed: int = 0
+    hedge_after_ms: Optional[float] = None
+    prewarm: bool = False           # trace every ladder rung up front
+
+
+@dataclasses.dataclass(frozen=True)
 class TrainConfig:
     """One detector training run (repro.train.detector).
 

@@ -11,9 +11,10 @@ from typing import Dict, List, Tuple
 
 from repro.configs import base
 from repro.configs.base import (DEFAULT_ISP_STAGES, EncodingConfig,
-                                FleetConfig, ISPConfig, MLAConfig,
-                                ModelConfig, MoEConfig, SNNConfig, SSMConfig,
-                                ShapeConfig, TrainConfig, TuneConfig)
+                                FaultConfig, FleetConfig, ISPConfig,
+                                MLAConfig, ModelConfig, MoEConfig, SNNConfig,
+                                SSMConfig, ShapeConfig, SupervisorConfig,
+                                TrainConfig, TuneConfig)
 
 # ---------------------------------------------------------------------------
 # Assigned architectures (shapes per brief; sources in DESIGN.md)
@@ -297,6 +298,59 @@ FLEET_CONFIGS: Dict[str, FleetConfig] = {
 
 def get_fleet_config(name: str) -> FleetConfig:
     return FLEET_CONFIGS[name]
+
+
+# ---------------------------------------------------------------------------
+# Named fault-injection schedules (repro.serve.faults) and supervision
+# policies (repro.serve.supervisor) for the self-healing serving stack
+# ---------------------------------------------------------------------------
+
+FAULT_CONFIGS: Dict[str, FaultConfig] = {
+    # clean control run — the soak bench's no-fault arm
+    "none": FaultConfig(name="none"),
+    # the CI chaos-smoke schedule: every fault kind present, rates
+    # high enough that a short soak sees each one several times
+    "chaos": FaultConfig(name="chaos", seed=7,
+                         p_corrupt_input=0.02, p_nan_output=0.05,
+                         p_transient=0.05, p_stall=0.03,
+                         p_malformed=0.03, stall_ms=40.0),
+    # NaN-storm: hammers the quarantine + breaker paths specifically
+    "nan_storm": FaultConfig(name="nan_storm", seed=11,
+                             p_nan_output=0.25, inf_fraction=0.5),
+    # flaky-accelerator profile: transient launch failures + stalls
+    "flaky_device": FaultConfig(name="flaky_device", seed=13,
+                                p_transient=0.15, p_stall=0.05,
+                                stall_ms=80.0),
+}
+
+
+def get_fault_config(name: str) -> FaultConfig:
+    return FAULT_CONFIGS[name]
+
+
+SUPERVISOR_CONFIGS: Dict[str, SupervisorConfig] = {
+    # balanced default: quarantine + breaker + retries, no hedging
+    "supervisor": SupervisorConfig(name="supervisor"),
+    # soak/CI profile: fast-twitch breaker (a SINGLE failed tick
+    # demotes) so even the 80-tick smoke horizon exercises the whole
+    # demote -> probe -> promote cycle — at chaos fault rates (~10% of
+    # ticks) two CONSECUTIVE failures are too rare for a short run,
+    # and a soak that never degrades proves nothing.  Hedging past
+    # 250 ms covers stalled ticks.
+    "soak": SupervisorConfig(name="soak", breaker_threshold=1,
+                             half_open_after=4, recovery_threshold=2,
+                             max_retries=3, retry_backoff_ms=2.0,
+                             hedge_after_ms=250.0),
+    # edge profile: no retries (a stale ADAS frame is worthless — shed
+    # and move on), hard tick deadline folded into breaker health
+    "edge_strict": SupervisorConfig(name="edge_strict", max_retries=0,
+                                    tick_deadline_ms=50.0,
+                                    breaker_threshold=2),
+}
+
+
+def get_supervisor_config(name: str) -> SupervisorConfig:
+    return SUPERVISOR_CONFIGS[name]
 
 
 # ---------------------------------------------------------------------------

@@ -52,13 +52,24 @@ class HeartbeatMonitor:
                 if now - st.last_heartbeat > self.timeout_s}
 
     def stragglers(self) -> Set[str]:
-        all_times = [t for st in self.workers.values()
-                     for t in st.step_times[-self.patience:]]
+        # dead workers are excluded on BOTH sides: a worker that
+        # stopped heartbeating is a failure, not a straggler, and its
+        # stale step times would drag the fleet median toward whatever
+        # it was doing before it died (masking real stragglers or
+        # flagging healthy workers)
+        dead = self.dead_workers()
+        alive = {w: st for w, st in self.workers.items() if w not in dead}
+        # median over the FULL retained window (not just the last
+        # ``patience`` samples): a fleet-wide slowdown — or a
+        # single-worker monitor, like the serving supervisor's — would
+        # otherwise move the median to the very samples under test and
+        # mask the straggler
+        all_times = [t for st in alive.values() for t in st.step_times]
         if not all_times:
             return set()
         med = sorted(all_times)[len(all_times) // 2]
         out = set()
-        for w, st in self.workers.items():
+        for w, st in alive.items():
             recent = st.step_times[-self.patience:]
             if len(recent) >= self.patience and \
                     all(t > self.straggler_factor * med for t in recent):
@@ -81,17 +92,43 @@ class RestartPlan:
 
 def plan_restart(n_devices_alive: int, ckpt_latest: Optional[int],
                  model_parallel: int = 16,
-                 steps_per_checkpoint: int = 100) -> RestartPlan:
+                 steps_per_checkpoint: int = 100,
+                 failed_step: Optional[int] = None) -> RestartPlan:
     """Elastic restart decision: largest (data, model) mesh the survivors
     support, resuming from the newest checkpoint.  Data order stays
-    deterministic because the loader is keyed on the step counter."""
+    deterministic because the loader is keyed on the step counter.
+
+    ``failed_step`` (the step the run died at, when the runner knows
+    it) makes ``dropped_batches`` exact: ``failed_step - restore_step``
+    batches of progress are replayed/discarded on resume.  Without it
+    the plan falls back to the pessimistic bound ``restore_step %
+    steps_per_checkpoint`` — the worst-case distance into a checkpoint
+    interval — which is also ZERO when the restore step is
+    checkpoint-aligned (the aligned case loses whatever ran after the
+    save, so pass ``failed_step`` whenever it is known)."""
+    if n_devices_alive <= 0:
+        # the old halving loop "converged" to a (0, mp) mesh here —
+        # a nonsensical plan a runner would crash on much later
+        raise ValueError(
+            f"cannot plan a restart with n_devices_alive="
+            f"{n_devices_alive}; no surviving devices means a cold "
+            f"restart, not an elastic reshard")
     mp = model_parallel
     while n_devices_alive % mp or mp < 1:
         mp //= 2
     mp = max(mp, 1)
     dp = n_devices_alive // mp
     restore = ckpt_latest
-    dropped = 0 if restore is None else restore % steps_per_checkpoint
+    if restore is None:
+        dropped = 0
+    elif failed_step is not None:
+        if failed_step < restore:
+            raise ValueError(
+                f"failed_step={failed_step} precedes the restore "
+                f"checkpoint at step {restore}")
+        dropped = failed_step - restore
+    else:
+        dropped = restore % steps_per_checkpoint
     return RestartPlan(survivors=n_devices_alive,
                        new_mesh_shape=(dp, mp),
                        restore_step=restore,

@@ -53,7 +53,7 @@ class EngineCore:
                  control_order: str = "pipeline",
                  enc_cfg: Optional[EncodingConfig] = None,
                  collect_sparsity: bool = False,
-                 mesh=None):
+                 mesh=None, tune_table="active"):
         self.cfg = cfg
         self.isp_cfg = isp_cfg if isp_cfg is not None else ISPConfig()
         self.enc_cfg = enc_cfg if enc_cfg is not None else EncodingConfig()
@@ -124,7 +124,15 @@ class EngineCore:
         # per-tick path never re-reads module state / re-stats table
         # files, and a mid-serving ``set_table`` swap cannot half-apply
         # to an engine whose executable is already traced.
-        self._tune_table = tune.active_table()
+        #
+        # ``tune_table`` overrides the snapshot: the fleet's fallback
+        # ladder builds its "per-layer pallas" rung by pinning an
+        # explicitly EMPTY TuningTable (every op resolves to its untuned
+        # default, fused=False) — ``pinned(None)`` would be a no-op that
+        # falls through to the env/packaged chain at trace time, so the
+        # empty table must be passed, not None.
+        self._tune_table = (tune.active_table() if tune_table == "active"
+                            else tune_table)
 
         def _encode(events):
             if ecfg.backend == "pallas":

@@ -35,17 +35,24 @@ class RequestStatus(enum.Enum):
     IN_FLIGHT = "in_flight"    # packed into a dispatched tick
     DONE = "done"              # result delivered
     EXPIRED = "expired"        # deadline passed while queued: shed
+    FAILED = "failed"          # malformed payload, quarantined output,
+                               # or a tick failure with retries exhausted
 
 
 @dataclasses.dataclass
 class RequestTelemetry:
     """Lifecycle timestamps (seconds on the serving clock, typically
-    ``time.perf_counter``) + deadline accounting."""
+    ``time.perf_counter``) + deadline/resilience accounting."""
     t_enqueue: float = 0.0
     t_admit: float = 0.0       # packed into a staging slot
     t_dispatch: float = 0.0    # tick executable launched (compute start)
     t_deliver: float = 0.0     # result fetched back to the host
     deadline_missed: bool = False
+    n_retries: int = 0         # re-dispatches after transient failures
+    n_hedges: int = 0          # hedged duplicates launched past the SLO
+    hedge_won: bool = False    # the hedge copy delivered first
+    quarantined: bool = False  # a non-finite result was caught en route
+    rung: Optional[str] = None  # ladder rung that served the delivery
 
     @property
     def latency_s(self) -> float:
@@ -65,17 +72,35 @@ class RequestTelemetry:
 class ServeRequest:
     """A ``PerceptionRequest`` wrapped with serving state.  ``deadline``
     is an ABSOLUTE clock value (None = no deadline); the fleet converts
-    the client-facing relative ``deadline_ms`` at enqueue."""
+    the client-facing relative ``deadline_ms`` at enqueue.
+
+    Resilience state: ``attempts`` counts dispatches (the retry budget
+    compares against it), ``not_before`` is the absolute backoff gate a
+    retried request waits behind in the queue, ``error`` carries the
+    terminal failure reason, and ``primary`` links a HEDGED duplicate
+    back to the client-held request — the duplicate is never returned
+    to the client, it just races the original (first delivery wins)."""
     request: "object"                       # PerceptionRequest
     deadline: Optional[float] = None
     kind: str = "voxels"                    # staging path: voxels|events
     status: RequestStatus = RequestStatus.QUEUED
     telemetry: RequestTelemetry = dataclasses.field(
         default_factory=RequestTelemetry)
+    attempts: int = 0                       # dispatch count
+    not_before: float = 0.0                 # retry backoff gate (abs clock)
+    error: Optional[str] = None             # terminal failure reason
+    primary: Optional["ServeRequest"] = None  # set on hedge copies only
+    hedge: Optional["ServeRequest"] = None  # the live copy, on primaries
+    parked: bool = False                    # retries exhausted; outcome
+                                            # rides on the live hedge
 
     @property
     def rid(self):
         return self.request.rid
+
+    @property
+    def is_hedge(self) -> bool:
+        return self.primary is not None
 
     def expired(self, now: float) -> bool:
         return self.deadline is not None and now > self.deadline
@@ -96,9 +121,14 @@ class AdmissionQueue:
     def __len__(self) -> int:
         return len(self._q)
 
-    def offer(self, sreq: ServeRequest, now: float) -> bool:
-        """Admit or reject (bounded depth).  Stamps ``t_enqueue``."""
-        sreq.telemetry.t_enqueue = now
+    def offer(self, sreq: ServeRequest, now: float,
+              requeue: bool = False) -> bool:
+        """Admit or reject (bounded depth).  Stamps ``t_enqueue``
+        except on a retry re-offer (``requeue=True``), which keeps the
+        ORIGINAL enqueue time so latency percentiles charge the whole
+        retry journey to the request."""
+        if not requeue:
+            sreq.telemetry.t_enqueue = now
         if len(self._q) >= self.max_depth:
             sreq.status = RequestStatus.REJECTED
             self.n_rejected += 1
@@ -121,8 +151,13 @@ class AdmissionQueue:
         return shed
 
     def pop_ready(self, now: float) -> Optional[ServeRequest]:
-        """Next admissible request (skipping/shedding expired heads is
-        the caller's job via :meth:`shed_expired`); None when empty."""
-        if not self._q:
-            return None
-        return self._q.popleft()
+        """Next admissible request whose retry-backoff gate has passed
+        (``not_before <= now``), preserving FIFO order among the ready;
+        requests still backing off keep their queue position.  None
+        when nothing is ready (shedding expired heads is the caller's
+        job via :meth:`shed_expired`)."""
+        for i, sreq in enumerate(self._q):
+            if sreq.not_before <= now:
+                del self._q[i]
+                return sreq
+        return None

@@ -1,0 +1,220 @@
+"""FleetSupervisor: health checks, circuit breaking, and graceful
+degradation for the fleet-serving stack.
+
+The paper's target envelope (ADAS/UAV perception) makes two demands
+the raw ``FleetEngine`` cannot meet alone: a tick that silently NaNs
+must never reach a client, and a hung or failing accelerator path must
+degrade to a slower-but-correct one instead of taking the service
+down.  The supervisor closes both gaps:
+
+* **Per-tick health.**  Every harvested tick reports (ok, wall time,
+  reason).  Tick wall times feed a
+  :class:`repro.distributed.fault_tolerance.HeartbeatMonitor` — the
+  same straggler detector the multi-host training path uses — so a
+  silently slowing engine (``straggler_factor`` x the running median
+  for ``straggler_patience`` consecutive ticks) trips the breaker even
+  when no tick crosses the hard ``tick_deadline_ms``.
+
+* **Circuit breaker.**  ``breaker_threshold`` CONSECUTIVE failed ticks
+  open the breaker: the supervisor demotes the serving engine one rung
+  down a pre-built fallback ladder (fused-pallas -> per-layer pallas
+  -> jnp — every rung computes the SAME numbers, just slower; the
+  parity is pinned by tests/test_supervisor.py).  Demotions are
+  recorded as telemetry events.
+
+* **Recovery.**  After ``half_open_after`` ticks in the degraded mode
+  the next tick PROBES the rung above (half-open).
+  ``recovery_threshold`` consecutive clean probes promote back up; a
+  single failed probe re-opens and restarts the timer.  The ladder
+  heals rung by rung, so a recovered accelerator climbs all the way
+  back to the fused path.
+
+The state machine (per demotion boundary)::
+
+    CLOSED --k consecutive failures--> OPEN (demote one rung)
+    OPEN   --half_open_after ticks---> HALF_OPEN (probe rung above)
+    HALF_OPEN --probe ok x recovery_threshold--> CLOSED (promote)
+    HALF_OPEN --probe fail--> OPEN (stay degraded, timer restarts)
+
+All decisions run on the fleet's injected serving clock and are pure
+host-side Python — a scripted fault schedule plus a fake clock drives
+every transition deterministically in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Callable, List, Optional
+
+from repro.configs.base import SupervisorConfig
+from repro.distributed.fault_tolerance import HeartbeatMonitor
+
+_ENGINE = "engine"                  # the heartbeat worker id
+
+
+class BreakerState(enum.Enum):
+    CLOSED = "closed"
+    OPEN = "open"
+    HALF_OPEN = "half_open"
+
+
+@dataclasses.dataclass
+class SupervisorEvent:
+    """One telemetry transition: breaker open/close, rung demote/
+    promote, probe outcomes."""
+    tick: int
+    event: str                      # "open"|"demote"|"probe"|"promote"|...
+    rung_from: int
+    rung_to: int
+    reason: str = ""
+
+
+class FleetSupervisor:
+    """Breaker + degradation policy over a named fallback ladder.
+
+    The supervisor does not own engines — the fleet asks
+    :meth:`select_rung` which rung to dispatch the NEXT tick on and
+    reports the outcome with :meth:`record_tick`; demotion/promotion
+    is a pure state change here, the fleet swaps its active core."""
+
+    def __init__(self, cfg: SupervisorConfig, ladder: List[str],
+                 clock: Callable[[], float]):
+        if not ladder:
+            raise ValueError("supervisor needs at least one ladder rung")
+        self.cfg = cfg
+        self.ladder = list(ladder)
+        self.clock = clock
+        self.rung = 0
+        self.state = BreakerState.CLOSED
+        self.consecutive_failures = 0
+        self.probe_successes = 0
+        self._ticks_since_open = 0
+        self.events: List[SupervisorEvent] = []
+        self.n_tick_failures = 0
+        self.n_quarantined = 0
+        self.degraded_ticks = 0
+        self.supervised_ticks = 0
+        self.heartbeat = HeartbeatMonitor(
+            [_ENGINE], timeout_s=cfg.heartbeat_timeout_s,
+            straggler_factor=cfg.straggler_factor,
+            patience=cfg.straggler_patience, clock=clock)
+
+    # ------------------------------------------------------------------
+    @property
+    def degraded(self) -> bool:
+        return self.rung > 0
+
+    def rung_name(self, rung: Optional[int] = None) -> str:
+        return self.ladder[self.rung if rung is None else rung]
+
+    def _log(self, tick: int, event: str, rung_from: int, rung_to: int,
+             reason: str = "") -> None:
+        self.events.append(SupervisorEvent(tick, event, rung_from,
+                                           rung_to, reason))
+
+    # ------------------------------------------------------------------
+    def select_rung(self, tick: int) -> int:
+        """Which ladder rung serves the tick about to be dispatched.
+        Handles the OPEN -> HALF_OPEN transition: once the degraded
+        mode has absorbed ``half_open_after`` ticks, subsequent ticks
+        probe the rung above until an outcome lands."""
+        if self.state is BreakerState.OPEN and self.rung > 0 \
+                and self._ticks_since_open >= self.cfg.half_open_after:
+            self.state = BreakerState.HALF_OPEN
+            self._log(tick, "probe", self.rung, self.rung - 1,
+                      "half-open probe")
+        if self.state is BreakerState.HALF_OPEN and self.rung > 0:
+            return self.rung - 1
+        return self.rung
+
+    def record_tick(self, tick: int, rung: int, ok: bool, wall_s: float,
+                    reason: str = "") -> None:
+        """Outcome of a harvested tick.  ``rung`` is what
+        :meth:`select_rung` returned when the tick was DISPATCHED —
+        with double-buffering two ticks ride in flight, so probe-ness
+        is a property of the tick, not of current supervisor state: a
+        tick that ran above the current rung was a half-open probe.
+        Also feeds the heartbeat/straggler monitor and folds a
+        straggler flag into the failure signal."""
+        self.supervised_ticks += 1
+        probe = rung < self.rung
+        if self.degraded and not probe:
+            self.degraded_ticks += 1
+        self.heartbeat.heartbeat(_ENGINE, step_time_s=wall_s)
+        if ok and self.heartbeat.stragglers():
+            ok, reason = False, "straggler"
+            # one flag per trip: drop the history so the breaker sees a
+            # fresh window after acting on this signal
+            self.heartbeat.workers[_ENGINE].step_times.clear()
+        if not ok:
+            self.n_tick_failures += 1
+
+        if probe:
+            if ok:
+                self.probe_successes += 1
+                if self.probe_successes >= self.cfg.recovery_threshold:
+                    self._promote(tick)
+            else:
+                self.probe_successes = 0
+                self.state = BreakerState.OPEN
+                self._ticks_since_open = 0
+                self._log(tick, "probe_failed", rung, self.rung, reason)
+            return
+
+        if self.state is BreakerState.OPEN:
+            self._ticks_since_open += 1
+
+        if ok:
+            self.consecutive_failures = 0
+            if self.state is BreakerState.OPEN and not self.degraded:
+                # floor-rung trip (nowhere to demote): close the
+                # breaker after the cooldown window passes clean
+                self.probe_successes += 1
+                if (self._ticks_since_open >= self.cfg.half_open_after
+                        and self.probe_successes
+                        >= self.cfg.recovery_threshold):
+                    self.probe_successes = 0
+                    self.state = BreakerState.CLOSED
+                    self._log(tick, "close", self.rung, self.rung,
+                              "recovered")
+            return
+        self.consecutive_failures += 1
+        if self.consecutive_failures >= self.cfg.breaker_threshold:
+            self._open(tick, reason)
+
+    # ------------------------------------------------------------------
+    def _open(self, tick: int, reason: str) -> None:
+        self.consecutive_failures = 0
+        self.probe_successes = 0
+        self._ticks_since_open = 0
+        if self.rung + 1 < len(self.ladder):
+            self.state = BreakerState.OPEN
+            self._log(tick, "demote", self.rung, self.rung + 1, reason)
+            self.rung += 1
+        else:
+            # already on the floor rung: log the trip, keep serving —
+            # a wrong answer is quarantined upstream, and a slow jnp
+            # tick still beats no tick for the requests that survive
+            self.state = BreakerState.OPEN
+            self._log(tick, "breaker_floor", self.rung, self.rung, reason)
+
+    def _promote(self, tick: int) -> None:
+        self.probe_successes = 0
+        self._ticks_since_open = 0
+        self._log(tick, "promote", self.rung, self.rung - 1, "recovered")
+        self.rung -= 1
+        self.state = (BreakerState.CLOSED if self.rung == 0
+                      else BreakerState.OPEN)
+
+    # ------------------------------------------------------------------
+    def stats(self) -> dict:
+        return {
+            "breaker_state": self.state.value,
+            "active_rung": self.rung,
+            "active_backend": self.rung_name(),
+            "tick_failures": self.n_tick_failures,
+            "quarantined": self.n_quarantined,
+            "degraded_ticks": self.degraded_ticks,
+            "supervised_ticks": self.supervised_ticks,
+            "transitions": [dataclasses.asdict(e) for e in self.events],
+        }

@@ -99,10 +99,19 @@ class DoubleBuffer:
 
 
 def validate_request(req, in_channels: int,
-                     events_only: bool = False) -> str:
+                     events_only: bool = False, *,
+                     time_steps: int = None,
+                     voxel_hw: Tuple[int, int] = None,
+                     frame_hw: Tuple[int, int] = None) -> str:
     """Payload validation shared by every submit path.  Returns the
     staging kind ``"voxels"`` | ``"events"`` or raises ValueError with
-    the engine's historical messages."""
+    the engine's historical messages.
+
+    The optional keyword shapes harden the edge: when given, a voxel
+    payload must be exactly ``[time_steps, H, W, in_channels]`` and the
+    bayer frame ``frame_hw`` — shape garbage then fails HERE with a
+    client-attributable error instead of blowing up mid-tick inside the
+    serving loop (the fleet's malformed-request fault mode)."""
     if events_only or req.voxels is None:
         if req.events is None:
             if events_only:
@@ -114,10 +123,43 @@ def validate_request(req, in_channels: int,
         if in_channels != 2:
             raise ValueError("event ingestion needs in_channels=2 "
                              "(DVS polarity channels)")
+        for leaf in (req.events.t, req.events.x, req.events.y,
+                     req.events.p):
+            if np.ndim(leaf) != 1:
+                raise ValueError(
+                    f"request {req.rid}: event stream leaves must be "
+                    f"1-D [N], got ndim={np.ndim(leaf)}")
+        _check_bayer(req, frame_hw)
         return "events"
     if req.bayer is None:
         raise ValueError(f"request {req.rid} carries no bayer frame")
+    vox = np.shape(req.voxels)
+    if len(vox) != 4:
+        raise ValueError(
+            f"request {req.rid}: voxels must be [T, H, W, C], got "
+            f"shape {vox}")
+    want = (time_steps if time_steps is not None else vox[0],
+            voxel_hw[0] if voxel_hw is not None else vox[1],
+            voxel_hw[1] if voxel_hw is not None else vox[2],
+            in_channels)
+    if vox != want:
+        raise ValueError(
+            f"request {req.rid}: voxel shape {vox} does not match the "
+            f"engine's [T, H, W, C]={want}")
+    _check_bayer(req, frame_hw)
     return "voxels"
+
+
+def _check_bayer(req, frame_hw) -> None:
+    shape = np.shape(req.bayer)
+    if len(shape) != 2:
+        raise ValueError(
+            f"request {req.rid}: bayer frame must be 2-D [H, W], got "
+            f"shape {shape}")
+    if frame_hw is not None and tuple(shape) != tuple(frame_hw):
+        raise ValueError(
+            f"request {req.rid}: bayer frame {shape} does not match "
+            f"the engine's frame_hw={tuple(frame_hw)}")
 
 
 def stage_request(bank: StagingBank, slot: int, req, kind: str,

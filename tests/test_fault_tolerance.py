@@ -1,0 +1,146 @@
+"""Unit tests for the distributed fault-tolerance logic: heartbeat
+timeouts, straggler detection (fake clock, no sleeps), elastic
+restart-plan mesh derivation, and dropped-batch accounting."""
+import pytest
+
+from repro.distributed.fault_tolerance import (HeartbeatMonitor,
+                                               plan_restart)
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_timeout():
+    clk = _FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2"], timeout_s=10.0, clock=clk)
+    clk.t = 5.0
+    mon.heartbeat("w0")
+    mon.heartbeat("w1")
+    clk.t = 11.0                    # w2 last beat at t=0 -> 11 > 10
+    assert mon.dead_workers() == {"w2"}
+    assert mon.healthy_count() == 2
+    clk.t = 16.0                    # now w0/w1 (t=5) are dead too
+    assert mon.dead_workers() == {"w0", "w1", "w2"}
+    mon.heartbeat("w2")             # resurrection: a beat revives
+    assert mon.dead_workers() == {"w0", "w1"}
+
+
+def test_straggler_needs_patience_consecutive_slow_steps():
+    clk = _FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2", "w3"], timeout_s=1e9,
+                           straggler_factor=2.0, patience=3, clock=clk)
+    for _ in range(3):
+        for w in ("w0", "w1", "w2"):
+            mon.heartbeat(w, step_time_s=1.0)
+        mon.heartbeat("w3", step_time_s=5.0)
+    assert mon.stragglers() == {"w3"}
+    # one fast step breaks the consecutive window
+    mon.heartbeat("w3", step_time_s=1.0)
+    assert mon.stragglers() == set()
+
+
+def test_straggler_median_excludes_dead_workers():
+    """A dead worker's stale step times must not drag the fleet median
+    (and a dead worker is a FAILURE, not a straggler)."""
+    clk = _FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "w2", "dead"], timeout_s=10.0,
+                           straggler_factor=2.0, patience=3, clock=clk)
+    # the doomed worker logs huge step times, then stops beating
+    for _ in range(3):
+        mon.heartbeat("dead", step_time_s=100.0)
+    clk.t = 20.0                    # past timeout: "dead" is dead
+    for _ in range(3):
+        for w in ("w0", "w1"):
+            mon.heartbeat(w, step_time_s=1.0)
+        mon.heartbeat("w2", step_time_s=3.0)
+    assert mon.dead_workers() == {"dead"}
+    # with the dead worker's 100 s samples in the median, w2's 3 s
+    # steps would look healthy; excluding them, 3 > 2 x median(1)
+    assert mon.stragglers() == {"w2"}
+
+
+def test_dead_worker_never_flagged_straggler():
+    clk = _FakeClock()
+    mon = HeartbeatMonitor(["w0", "w1", "slow"], timeout_s=10.0,
+                           straggler_factor=2.0, patience=2, clock=clk)
+    for _ in range(2):
+        mon.heartbeat("w0", step_time_s=1.0)
+        mon.heartbeat("w1", step_time_s=1.0)
+        mon.heartbeat("slow", step_time_s=10.0)
+    assert mon.stragglers() == {"slow"}
+    clk.t = 20.0                    # "slow" stops beating entirely
+    for _ in range(2):
+        mon.heartbeat("w0", step_time_s=1.0)
+        mon.heartbeat("w1", step_time_s=1.0)
+    assert "slow" in mon.dead_workers()
+    assert mon.stragglers() == set()
+
+
+# ---------------------------------------------------------------------------
+# plan_restart
+# ---------------------------------------------------------------------------
+
+def test_plan_restart_mesh_shapes():
+    assert plan_restart(256, 500).new_mesh_shape == (16, 16)
+    assert plan_restart(192, 500).new_mesh_shape == (12, 16)
+    # survivors not divisible by mp: halve until they are
+    assert plan_restart(200, 500).new_mesh_shape == (25, 8)
+    assert plan_restart(6, 500, model_parallel=4).new_mesh_shape == (3, 2)
+    # prime survivor count degrades to pure data parallelism
+    assert plan_restart(7, 500).new_mesh_shape == (7, 1)
+
+
+def test_plan_restart_zero_devices_fails_loudly():
+    """The old halving loop 'converged' to a nonsensical (0, mp) mesh
+    for a fully-dead fleet; that must be an error at plan time."""
+    with pytest.raises(ValueError, match="n_devices_alive"):
+        plan_restart(0, 500)
+    with pytest.raises(ValueError, match="n_devices_alive"):
+        plan_restart(-8, 500)
+
+
+def test_plan_restart_no_checkpoint():
+    plan = plan_restart(64, None)
+    assert plan.restore_step is None
+    assert plan.dropped_batches == 0
+
+
+def test_plan_restart_exact_dropped_batches_with_failed_step():
+    # checkpoint-aligned restore: the legacy modulo bound says 0
+    # dropped, but 73 steps of progress after the save are really lost
+    plan = plan_restart(64, 700, steps_per_checkpoint=100,
+                        failed_step=773)
+    assert plan.restore_step == 700
+    assert plan.dropped_batches == 73
+    # failure exactly at the save point: nothing lost
+    assert plan_restart(64, 700, failed_step=700).dropped_batches == 0
+    # a failed_step before the restore point is caller error
+    with pytest.raises(ValueError, match="precedes"):
+        plan_restart(64, 700, failed_step=650)
+
+
+def test_plan_restart_legacy_bound_without_failed_step():
+    # without failed_step the pessimistic modulo bound is kept
+    # (pinned also by tests/test_checkpoint.py's elastic-mesh test)
+    assert plan_restart(64, 730, steps_per_checkpoint=100) \
+        .dropped_batches == 30
+    assert plan_restart(64, 700, steps_per_checkpoint=100) \
+        .dropped_batches == 0
+
+
+def test_plan_restart_determinism():
+    a = plan_restart(192, 730, model_parallel=16,
+                     steps_per_checkpoint=100, failed_step=745)
+    b = plan_restart(192, 730, model_parallel=16,
+                     steps_per_checkpoint=100, failed_step=745)
+    assert a == b
+    assert a.dropped_batches == 15
